@@ -1,0 +1,68 @@
+"""TPU-kernel micro-bench: wall time of the jnp reference path on this host
+(the Pallas kernels target TPU; interpret mode is a correctness tool, not a
+perf path) + arithmetic-intensity table used by the roofline analysis."""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ref
+
+
+def _time(fn, *args, iters=3):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6  # us
+
+
+def rows():
+    rng = np.random.RandomState(0)
+    out = []
+    # matmul 256 (paper's size), fp32
+    a = jnp.asarray(rng.randn(256, 256), jnp.float32)
+    b = jnp.asarray(rng.randn(256, 256), jnp.float32)
+    f = jax.jit(ref.matmul_ref)
+    us = _time(f, a, b)
+    flops = 2 * 256 ** 3
+    out.append({"kernel": "matmul256_f32", "us_per_call": round(us, 1),
+                "gflops_host": round(flops / us / 1e3, 2),
+                "intensity_flop_per_byte": 16.0})
+    # axpy 1M
+    x = jnp.asarray(rng.randn(1 << 20), jnp.float32)
+    y = jnp.asarray(rng.randn(1 << 20), jnp.float32)
+    f = jax.jit(lambda xx, yy: ref.axpy_ref(2.0, xx, yy))
+    us = _time(f, x, y)
+    out.append({"kernel": "axpy_1M_f32", "us_per_call": round(us, 1),
+                "gbytes_per_s_host": round(3 * 4 * (1 << 20) / us / 1e3, 2),
+                "intensity_flop_per_byte": round(1 / 6, 4)})
+    # conv GoogLeNet-1 (fp32)
+    x = jnp.asarray(rng.randn(3, 118, 118), jnp.float32)
+    w = jnp.asarray(rng.randn(64, 3, 7, 7), jnp.float32)
+    f = jax.jit(ref.conv2d_ref)
+    us = _time(f, x, w)
+    flops = 2 * 64 * 3 * 7 * 7 * 112 * 112
+    out.append({"kernel": "conv_googlenet1_f32", "us_per_call": round(us, 1),
+                "gflops_host": round(flops / us / 1e3, 2),
+                "intensity_flop_per_byte": 34.9})
+    # flash attention 1k
+    q = jnp.asarray(rng.randn(1, 8, 1024, 64), jnp.bfloat16)
+    f = jax.jit(lambda qq: ref.flash_attention_ref(qq, qq, qq))
+    us = _time(f, q)
+    out.append({"kernel": "attention_1k_bf16", "us_per_call": round(us, 1)})
+    # ssm scan 4k
+    qs = jnp.asarray(rng.randn(8, 4096, 64), jnp.float32)
+    ld = -jnp.asarray(rng.rand(8, 4096), jnp.float32)
+    f = jax.jit(lambda a, l: ref.ssm_scan_ref(a, a, a, l, -l))
+    us = _time(f, qs, ld)
+    out.append({"kernel": "ssm_scan_4k_f32", "us_per_call": round(us, 1)})
+    return out
+
+
+def main(emit):
+    for r in rows():
+        emit("kernel_bench", r)

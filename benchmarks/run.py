@@ -1,0 +1,66 @@
+"""Benchmark harness: one module per paper table/figure + kernel micro-bench
++ dry-run roofline summary. Prints ``table,key=value,...`` CSV-ish lines.
+
+  PYTHONPATH=src python -m benchmarks.run [--only fig5_matmul]
+"""
+import argparse
+import sys
+import time
+
+
+def _emit(table: str, row: dict) -> None:
+    parts = [table] + [f"{k}={v}" for k, v in row.items()]
+    print(",".join(parts), flush=True)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    from benchmarks import (fig5_matmul, fig6_kernels, kernel_bench,
+                            table1_hwacha, table3_efficiency)
+    mods = {
+        "fig5_matmul": fig5_matmul,
+        "fig6_kernels": fig6_kernels,
+        "table1_hwacha": table1_hwacha,
+        "table3_efficiency": table3_efficiency,
+        "kernel_bench": kernel_bench,
+    }
+    failures = 0
+    for name, mod in mods.items():
+        if args.only and name != args.only:
+            continue
+        t0 = time.time()
+        try:
+            mod.main(_emit)
+            print(f"# {name} done in {time.time()-t0:.1f}s", flush=True)
+        except Exception as e:  # noqa: BLE001
+            failures += 1
+            print(f"# {name} FAILED: {e}", flush=True)
+
+    # dry-run roofline summary (if the farm has run)
+    try:
+        from repro.launch.report import load_all, pick_hillclimb
+        rows = load_all("experiments/dryrun")
+        for r in rows:
+            rl = r["roofline"]
+            _emit("dryrun_roofline", {
+                "arch": r["arch"], "shape": r["shape"], "mesh": r["mesh"],
+                "compute_s": round(rl["compute_s"], 5),
+                "memory_s": round(rl["memory_s"], 5),
+                "collective_s": round(rl["collective_s"], 5),
+                "bottleneck": rl["bottleneck"],
+                "mfu_bound": round(rl["mfu_bound"], 4),
+                "useful_ratio": round(rl["useful_ratio"], 3),
+            })
+        if rows:
+            print("# dryrun_roofline done", flush=True)
+    except Exception as e:  # noqa: BLE001
+        print(f"# dryrun_roofline skipped: {e}", flush=True)
+
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

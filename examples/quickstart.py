@@ -1,0 +1,55 @@
+"""Quickstart: build an assigned architecture, run a forward pass, a train
+step, and a roofline estimate — the public API in ~40 lines.
+
+  PYTHONPATH=src python examples/quickstart.py [--arch tinyllama-1.1b]
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, reduced, SHAPES
+from repro.core.roofline import model_flops
+from repro.models.layers import init_params, tree_size_bytes
+from repro.models import transformer as tf
+from repro.models.sharding import MeshCtx
+from repro.optim import adamw
+from repro.train import step as step_lib
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tinyllama-1.1b")
+    args = ap.parse_args()
+
+    full = get_config(args.arch)
+    cfg = reduced(full)  # CPU-sized same-family config
+    print(f"{full.name}: {full.param_count()/1e9:.2f}B params "
+          f"({full.active_param_count()/1e9:.2f}B active), "
+          f"family={full.family}")
+    print(f"train_4k model FLOPs: {model_flops(full, SHAPES['train_4k']):.3e}")
+
+    params = init_params(tf.model_template(cfg), jax.random.PRNGKey(0))
+    print(f"reduced config params: {tree_size_bytes(params)/1e6:.1f} MB")
+
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 32), 0,
+                                cfg.vocab_size)
+    kw = {}
+    if cfg.frontend_seq:
+        kw["frontend_emb"] = jax.random.normal(
+            jax.random.PRNGKey(2),
+            (2, cfg.frontend_seq, cfg.frontend_dim or cfg.d_model))
+    logits, aux, _ = tf.forward(cfg, params, tokens, **kw)
+    print(f"forward: logits {logits.shape}, aux={float(aux):.3f}")
+
+    bundle = step_lib.make_train_step(cfg, adamw.OptConfig(),
+                                      MeshCtx(mesh=None))
+    state = {"params": params, "opt": adamw.init(adamw.OptConfig(), params)}
+    batch = {"tokens": tokens, "labels": jnp.roll(tokens, -1, 1), **kw}
+    state, metrics = jax.jit(bundle.step_fn)(state, batch)
+    print(f"train step: loss={float(metrics['loss']):.4f} "
+          f"grad_norm={float(metrics['grad_norm']):.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,96 @@
+"""Hillclimb driver: run tagged dry-run variants of the three chosen cells
+and print before/after roofline terms (EXPERIMENTS.md §Perf source).
+
+  PYTHONPATH=src python experiments/hillclimb.py --iter 1
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse
+import dataclasses
+import json
+
+from repro.configs import get_config
+from repro.launch.dryrun import run_cell
+
+OUT = "experiments/dryrun"
+
+
+def show(tag, r):
+    rl = r["roofline"]
+    print(f"[{tag}] {r['arch']} {r['shape']}: "
+          f"c={rl['compute_s']:.2f} m={rl['memory_s']:.2f} "
+          f"x={rl['collective_s']:.2f} bottleneck={rl['bottleneck']} "
+          f"step={rl['achievable_step_s']:.3g}s mfu={rl['mfu_bound']:.4f}",
+          flush=True)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--iter", type=int, required=True)
+    ap.add_argument("--cell", default="all",
+                    choices=("all", "llama3", "deepseek", "granite"))
+    args = ap.parse_args()
+    it = args.iter
+
+    if it == 1:
+        # iteration 1 (code change active for all: chunked attention slices
+        # KV in place instead of transpose-stacking — kills the prefill
+        # all-gather); per-cell config changes:
+        if args.cell in ("all", "llama3"):
+            # llama3: remat "dots" — keep matmul outputs, stop recomputing
+            # attention in backward (memory-term hypothesis)
+            r = run_cell("llama3-8b", "train_4k", False, OUT,
+                         overrides={"remat": "dots"}, tag="hc1")
+            show("hc1", r)
+        if args.cell in ("all", "deepseek"):
+            # deepseek prefill: inference sharding — no FSDP gathers at
+            # serve time (weights EP/TP-sharded, stationary)
+            r = run_cell("deepseek-v3-671b", "prefill_32k", False, OUT,
+                         overrides={"fsdp": False}, tag="hc1")
+            show("hc1", r)
+        if args.cell in ("all", "granite"):
+            # granite: pad 40 experts -> 48, unlock EP all_to_all path
+            cfg = get_config("granite-moe-3b-a800m")
+            moe = dataclasses.replace(cfg.moe, pad_experts_to=48)
+            r = run_cell("granite-moe-3b-a800m", "train_4k", False, OUT,
+                         overrides={"moe": moe}, tag="hc1")
+            show("hc1", r)
+
+    elif it == 0:
+        # re-measure baselines with CURRENT code (post-attention-rewrite)
+        for arch, shape in (("llama3-8b", "train_4k"),
+                            ("deepseek-v3-671b", "prefill_32k"),
+                            ("granite-moe-3b-a800m", "train_4k")):
+            if args.cell != "all" and not arch.startswith(args.cell.split("-")[0]):
+                continue
+            r = run_cell(arch, shape, False, OUT, tag="attnfix")
+            show("attnfix", r)
+
+    elif it == 2:
+        if args.cell in ("all", "llama3"):
+            # llama3: bf16 KV/logits path — unembed+CE in bf16 storage with
+            # f32 accum; plus larger attention chunk (fewer scan steps)
+            import repro.models.attention as attn
+            attn.KV_CHUNK = 2048
+            r = run_cell("llama3-8b", "train_4k", False, OUT,
+                         overrides={"remat": "dots"}, tag="hc2")
+            show("hc2", r)
+        if args.cell in ("all", "deepseek"):
+            # deepseek: inference sharding + bf16 params for serving
+            r = run_cell("deepseek-v3-671b", "prefill_32k", False, OUT,
+                         overrides={"fsdp": False,
+                                    "param_dtype": "bfloat16"}, tag="hc2")
+            show("hc2", r)
+        if args.cell in ("all", "granite"):
+            # granite: EP + bigger EP chunk + fsdp for moments? -> measure
+            cfg = get_config("granite-moe-3b-a800m")
+            moe = dataclasses.replace(cfg.moe, pad_experts_to=48,
+                                      capacity_factor=1.0)
+            r = run_cell("granite-moe-3b-a800m", "train_4k", False, OUT,
+                         overrides={"moe": moe, "remat": "dots"}, tag="hc2")
+            show("hc2", r)
+
+
+if __name__ == "__main__":
+    main()

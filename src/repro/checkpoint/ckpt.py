@@ -1,0 +1,123 @@
+"""Sharded, manifest-verified, async checkpointing with elastic restore.
+
+Layout: <dir>/step_<N>/
+  manifest.json          — tree structure, shapes, dtypes, crc32 per leaf,
+                           completeness marker (written LAST -> atomic)
+  <leaf-path>.npy        — one file per leaf (full array; per-shard files
+                           are an orthogonal optimization on real fleets)
+
+Fault-tolerance contract:
+- a crashed save never produces a loadable step (manifest written last)
+- restore works onto ANY mesh: arrays are loaded host-side and device_put
+  with the *target* sharding (elastic re-shard on load — ft/elastic.py)
+- ``keep`` limits retained steps; save is async (background thread) so the
+  train loop never blocks on disk
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import zlib
+from typing import Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree, prefix=()):
+    if isinstance(tree, dict):
+        for k in sorted(tree):
+            yield from _flatten(tree[k], prefix + (str(k),))
+    else:
+        yield prefix, tree
+
+
+def _unflatten(items):
+    root: dict = {}
+    for path, val in items:
+        node = root
+        for k in path[:-1]:
+            node = node.setdefault(k, {})
+        node[path[-1]] = val
+    return root
+
+
+def save(directory: str, step: int, tree, *, keep: int = 3,
+         blocking: bool = True) -> threading.Thread:
+    """Write checkpoint for ``step``. Returns the writer thread."""
+    host_tree = [(p, np.asarray(x)) for p, x in _flatten(tree)]
+
+    def _write():
+        final = os.path.join(directory, f"step_{step:08d}")
+        tmp = final + ".tmp"
+        os.makedirs(tmp, exist_ok=True)
+        manifest = {"step": step, "leaves": {}}
+        for path, arr in host_tree:
+            name = "/".join(path)
+            fn = name.replace("/", "__") + ".npy"
+            np.save(os.path.join(tmp, fn), arr)
+            manifest["leaves"][name] = {
+                "file": fn, "shape": list(arr.shape), "dtype": str(arr.dtype),
+                "crc32": zlib.crc32(np.ascontiguousarray(arr).tobytes())
+                & 0xFFFFFFFF,
+            }
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)                   # atomic completeness marker
+        _gc(directory, keep)
+
+    t = threading.Thread(target=_write, daemon=True)
+    t.start()
+    if blocking:
+        t.join()
+    return t
+
+
+def _gc(directory: str, keep: int):
+    steps = sorted(latest_steps(directory))
+    for s in steps[:-keep]:
+        shutil.rmtree(os.path.join(directory, f"step_{s:08d}"),
+                      ignore_errors=True)
+
+
+def latest_steps(directory: str):
+    if not os.path.isdir(directory):
+        return []
+    out = []
+    for d in os.listdir(directory):
+        if d.startswith("step_") and not d.endswith(".tmp") \
+                and os.path.exists(os.path.join(directory, d, "manifest.json")):
+            out.append(int(d[5:]))
+    return sorted(out)
+
+
+def restore(directory: str, *, step: Optional[int] = None,
+            shardings=None, verify: bool = True):
+    """Load a checkpoint; device_put each leaf with the target sharding
+    (may be a different mesh than it was saved from — elastic restore).
+    Returns (step, tree) or (None, None) if nothing loadable."""
+    steps = latest_steps(directory)
+    if not steps:
+        return None, None
+    step = step if step is not None else steps[-1]
+    d = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    sh_flat = dict((("/".join(p)), s) for p, s in _flatten(shardings)) \
+        if shardings is not None else {}
+    items = []
+    for name, meta in manifest["leaves"].items():
+        arr = np.load(os.path.join(d, meta["file"]))
+        if verify:
+            crc = zlib.crc32(np.ascontiguousarray(arr).tobytes()) & 0xFFFFFFFF
+            if crc != meta["crc32"]:
+                raise IOError(f"checkpoint corruption in {name} "
+                              f"(crc {crc} != {meta['crc32']})")
+        sh = sh_flat.get(name)
+        val = jax.device_put(arr, sh) if sh is not None else arr
+        items.append((tuple(name.split("/")), val))
+    return step, _unflatten(items)

@@ -1,0 +1,83 @@
+"""Compute/communication overlap (vector chaining at mesh scale).
+
+Ara's chaining overlaps a consumer FU with a producer at element
+granularity (§III-E3). At mesh scale the analogue is overlapping collective
+steps with partial compute: ring variants of all-gather/reduce-scatter
+matmuls built from shard_map + ppermute, so each ICI hop is hidden behind
+one shard's matmul. These are the beyond-paper §Perf levers for
+collective-bound cells.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as PS
+
+
+def all_gather_matmul(x, w, mesh, axis: str, transpose: bool = False):
+    """y = all_gather(x, axis) @ w, overlapped.
+
+    x: (m_local, k) sharded on ``axis`` along m; w: (k, n) replicated.
+    Computes x_full @ w without first materializing x_full: each step
+    multiplies the shard it holds while ppermuting the next shard in.
+    Returns (m_local * n_axis, n) sharded like an all-gather result.
+    """
+    n_dev = mesh.shape[axis]
+
+    def device_fn(x_loc, w_loc):
+        idx = jax.lax.axis_index(axis)
+        m_loc = x_loc.shape[0]
+        out = jnp.zeros((n_dev * m_loc, w_loc.shape[1]), x_loc.dtype)
+        perm = [(i, (i + 1) % n_dev) for i in range(n_dev)]
+
+        def body(i, carry):
+            buf, out = carry
+            src = (idx - i) % n_dev           # owner of the shard we hold
+            part = jnp.dot(buf, w_loc, preferred_element_type=jnp.float32)
+            out = jax.lax.dynamic_update_slice(
+                out, part.astype(out.dtype), (src * m_loc, 0))
+            buf = jax.lax.ppermute(buf, axis, perm)
+            return (buf, out)
+
+        buf, out = jax.lax.fori_loop(0, n_dev, body, (x_loc, out))
+        return out
+
+    return jax.shard_map(device_fn, mesh=mesh,
+                         in_specs=(PS(axis, None), PS(None, None)),
+                         out_specs=PS(None, None), check_vma=False)(x, w)
+
+
+def matmul_reduce_scatter(x, w, mesh, axis: str):
+    """y = reduce_scatter(x @ w_sharded, axis), overlapped.
+
+    x: (m, k_local) sharded on k; w: (k_local, n). The full (m, n) partial
+    product never materializes per device: accumulate ring-style, each
+    device ends with its (m/n_dev, n) slice of the sum.
+    """
+    n_dev = mesh.shape[axis]
+
+    def device_fn(x_loc, w_loc):
+        idx = jax.lax.axis_index(axis)
+        m = x_loc.shape[0]
+        m_loc = m // n_dev
+        perm = [(i, (i + 1) % n_dev) for i in range(n_dev)]
+        acc0 = jnp.zeros((m_loc, w_loc.shape[1]), jnp.float32)
+
+        def body(i, acc):
+            # contribute the chunk that reaches its owner after the
+            # remaining n-1-i hops: owner = idx + (n-1-i)
+            chunk = (idx + n_dev - 1 - i) % n_dev
+            xs = jax.lax.dynamic_slice(x_loc, (chunk * m_loc, 0),
+                                       (m_loc, x_loc.shape[1]))
+            part = jnp.dot(xs, w_loc, preferred_element_type=jnp.float32)
+            acc = jax.lax.ppermute(acc, axis, perm) + part
+            return acc
+
+        acc = jax.lax.fori_loop(0, n_dev, body, acc0)
+        return acc.astype(x_loc.dtype)
+
+    return jax.shard_map(device_fn, mesh=mesh,
+                         in_specs=(PS(None, axis), PS(axis, None)),
+                         out_specs=PS(axis, None), check_vma=False)(x, w)

@@ -1,0 +1,323 @@
+"""Trip-count-aware HLO analysis (the dry-run profiler).
+
+XLA's HloCostAnalysis (jax ``compiled.cost_analysis()``) counts a while-loop
+body ONCE — a scanned 61-layer model reports 1/61st of its FLOPs. This module
+parses the post-SPMD-partitioning HLO text, walks the computation call graph
+(while/conditional/call), multiplies by parsed trip counts, and accumulates:
+
+- dot FLOPs (2 * prod(result) * prod(lhs contracting dims)), resolving
+  operand types through an SSA table (optimized HLO omits inline types)
+- bytes accessed (operands + results of HBM-level ops; fusions opaque,
+  but dots inside fusion bodies still counted for FLOPs)
+- collective bytes per device, by kind, with ring-model traffic:
+    all-reduce 2*R*(g-1)/g | all-gather R*(g-1)/g | reduce-scatter R*(g-1)
+    all-to-all R*(g-1)/g   | collective-permute R
+
+Shapes in the partitioned module are per-device, so totals are per-device.
+
+CPU-backend caveat (documented in EXPERIMENTS.md): XLA CPU float-normalizes
+bf16 compute to f32, so activation tensors appear at 2x their TPU width;
+byte terms are therefore conservative upper bounds for bf16-intent traffic.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+from typing import Optional
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1, "token": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_ASSIGN_RE = re.compile(r"^\s*(?:ROOT\s+)?(%[\w\.\-]+)\s*=\s*(.*)$")
+_OPCODE_RE = re.compile(r"\s*([\w\-]+)\((.*)$", re.S)
+
+
+def _parse_op_line(line: str):
+    """-> (name, result_type, opcode, rest) or None. Handles tuple result
+    types with nested parens and /*index=N*/ comments."""
+    m = _ASSIGN_RE.match(line)
+    if not m:
+        return None
+    name, rhs = m.group(1), m.group(2)
+    if rhs.startswith("("):
+        depth = 0
+        end = -1
+        for i, ch in enumerate(rhs):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        if end < 0:
+            return None
+        rtype, tail = rhs[:end + 1], rhs[end + 1:]
+    else:
+        sp = rhs.find(" ")
+        if sp < 0:
+            return None
+        rtype, tail = rhs[:sp], rhs[sp:]
+    m2 = _OPCODE_RE.match(tail)
+    if not m2:
+        return None
+    return name, rtype, m2.group(1), m2.group(2)
+_REGION_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->.*{\s*$")
+_OPERAND_RE = re.compile(r"%[\w\.\-]+")
+_ATTR = {
+    "body": re.compile(r"body=%?([\w\.\-]+)"),
+    "cond": re.compile(r"condition=%?([\w\.\-]+)"),
+    "call": re.compile(r"to_apply=%?([\w\.\-]+)"),
+    "fusion": re.compile(r"calls=%?([\w\.\-]+)"),
+    "branches": re.compile(r"branch_computations=\{([^}]*)\}"),
+}
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([0-9, ]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[([0-9,]+)\]<=")
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_BOOKKEEPING = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota", "opt-barrier",
+    "bitcast-convert", "copy-start", "copy-done",
+}
+
+# Pure layout/dtype movement: a TPU backend fuses these into consumers, so
+# counting their traffic would overstate the memory term (CPU fuses less).
+_FUSABLE_MOVEMENT = {
+    "copy", "convert", "transpose", "reshape", "broadcast", "slice",
+    "reverse", "pad",
+}
+
+
+def _prod(xs):
+    out = 1
+    for x in xs:
+        out *= x
+    return out
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d.strip():
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _first_shape_dims(type_str: str):
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d.strip()]
+
+
+@dataclasses.dataclass
+class OpInfo:
+    name: str
+    opcode: str
+    result_type: str
+    rest: str
+    line: str
+
+
+@dataclasses.dataclass
+class HLOStats:
+    flops: float = 0.0
+    bytes_accessed: float = 0.0
+    collective_bytes: float = 0.0
+    collective_by_kind: dict = dataclasses.field(
+        default_factory=lambda: defaultdict(float))
+    collective_count: int = 0
+    top_collectives: list = dataclasses.field(default_factory=list)
+    dot_flops_by_shape: dict = dataclasses.field(
+        default_factory=lambda: defaultdict(float))
+
+    def as_dict(self) -> dict:
+        tops = defaultdict(float)
+        for k, v in self.top_collectives:
+            tops[k] += v
+        return {
+            "flops": self.flops,
+            "bytes_accessed": self.bytes_accessed,
+            "collective_bytes": self.collective_bytes,
+            "collective_by_kind": dict(self.collective_by_kind),
+            "collective_count": self.collective_count,
+            "top_collectives": sorted(tops.items(), key=lambda t: -t[1])[:12],
+            "top_dots": sorted(self.dot_flops_by_shape.items(),
+                               key=lambda t: -t[1])[:12],
+        }
+
+
+class Module:
+    def __init__(self, hlo_text: str):
+        self.regions: dict[str, list[OpInfo]] = {}
+        self.types: dict[str, str] = {}   # SSA name -> result type (global)
+        self.entry: Optional[str] = None
+        current = None
+        for line in hlo_text.splitlines():
+            stripped = line.strip()
+            if stripped.endswith("{") and "->" in stripped:
+                m = _REGION_HDR_RE.match(stripped)
+                if m:
+                    current = m.group(1)
+                    self.regions[current] = []
+                    if stripped.startswith("ENTRY"):
+                        self.entry = current
+                    # record parameter types from the header signature
+                    for pm in re.finditer(r"(%?[\w\.\-]+)\s*:\s*"
+                                          r"((?:\(?[a-z0-9]+\[[0-9,]*\][^,)]*)+)",
+                                          stripped):
+                        nm = pm.group(1)
+                        self.types[nm if nm.startswith("%") else "%" + nm] \
+                            = pm.group(2)
+                    continue
+            if stripped == "}":
+                current = None
+                continue
+            if current is None:
+                continue
+            parsed = _parse_op_line(line)
+            if parsed:
+                name, rtype, opcode, rest = parsed
+                op = OpInfo(name, opcode, rtype, rest, line)
+                self.regions[current].append(op)
+                self.types[op.name] = op.result_type
+
+    def operand_names(self, op: OpInfo):
+        # operands live before the first "),": take names up to attr section
+        head = op.rest.split("),")[0]
+        return _OPERAND_RE.findall(head)
+
+    def operand_bytes(self, op: OpInfo) -> int:
+        inline = _shape_bytes(op.rest.split("),")[0])
+        if inline:
+            return inline
+        return sum(_shape_bytes(self.types.get(nm, ""))
+                   for nm in self.operand_names(op))
+
+    def dot_flops(self, op: OpInfo) -> float:
+        result_elems = _prod(_first_shape_dims(op.result_type) or [1])
+        names = self.operand_names(op)
+        lhs_dims = []
+        if names:
+            lhs_dims = _first_shape_dims(self.types.get(names[0], ""))
+        if not lhs_dims:
+            lhs_dims = _first_shape_dims(op.rest)
+        contracted = 1
+        mc = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", op.line)
+        if mc and lhs_dims:
+            for idx in mc.group(1).split(","):
+                if idx.strip():
+                    i = int(idx)
+                    if i < len(lhs_dims):
+                        contracted *= lhs_dims[i]
+        return 2.0 * result_elems * contracted
+
+    def trip_count(self, cond_name: str) -> int:
+        best = 1
+        for op in self.regions.get(cond_name, []):
+            for c in _CONST_RE.findall(op.line):
+                best = max(best, int(c))
+        return best
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return max(len([x for x in m.group(1).split(",") if x.strip()]), 1)
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        dims = [int(d) for d in m.group(1).split(",")]
+        return max(int(round(_prod(dims) / dims[0])), 1) if dims else default
+    return default
+
+
+def analyze(hlo_text: str, n_devices: int = 1) -> HLOStats:
+    mod = Module(hlo_text)
+    stats = HLOStats()
+    if mod.entry is None:
+        return stats
+
+    def fusion_dot_flops(region: str, mult: float):
+        for op in mod.regions.get(region, []):
+            if op.opcode == "dot":
+                f = mod.dot_flops(op)
+                stats.flops += f * mult
+                stats.dot_flops_by_shape[op.result_type[:40]] += f * mult
+
+    def walk(name: str, mult: float):
+        for op in mod.regions.get(name, []):
+            oc = op.opcode
+            base = oc[:-6] if oc.endswith("-start") else oc
+            if oc.endswith("-done"):
+                continue
+            if base in COLLECTIVES:
+                rbytes = _shape_bytes(op.result_type)
+                if oc.endswith("-start") and op.result_type.startswith("("):
+                    rbytes = rbytes // 2  # (operand, result) tuple
+                g = _group_size(op.line, n_devices)
+                if base == "all-reduce":
+                    moved = 2.0 * rbytes * (g - 1) / max(g, 1)
+                elif base == "all-gather":
+                    moved = rbytes * (g - 1) / max(g, 1)
+                elif base == "reduce-scatter":
+                    moved = rbytes * (g - 1)
+                elif base == "all-to-all":
+                    moved = rbytes * (g - 1) / max(g, 1)
+                else:  # collective-permute
+                    moved = float(rbytes)
+                stats.collective_bytes += moved * mult
+                stats.collective_by_kind[base] += moved * mult
+                stats.collective_count += int(mult)
+                stats.top_collectives.append(
+                    (f"{base} {op.result_type[:44]} g={g}", moved * mult))
+                continue
+            if oc == "while":
+                mb = _ATTR["body"].search(op.line)
+                mc = _ATTR["cond"].search(op.line)
+                trips = mod.trip_count(mc.group(1)) if mc else 1
+                if mb:
+                    walk(mb.group(1), mult * trips)
+                continue
+            if oc == "conditional":
+                mbr = _ATTR["branches"].search(op.line)
+                if mbr:
+                    for br in mbr.group(1).split(","):
+                        walk(br.strip().lstrip("%"), mult)
+                continue
+            if oc == "call":
+                mcall = _ATTR["call"].search(op.line)
+                if mcall:
+                    walk(mcall.group(1), mult)
+                continue
+            if oc in _BOOKKEEPING or oc in _FUSABLE_MOVEMENT:
+                continue
+            if oc == "dot":
+                f = mod.dot_flops(op)
+                stats.flops += f * mult
+                stats.dot_flops_by_shape[op.result_type[:40]] += f * mult
+            elif oc == "convolution":
+                stats.flops += 2.0 * _prod(
+                    _first_shape_dims(op.result_type) or [1]) * mult
+            elif oc == "fusion":
+                mf = _ATTR["fusion"].search(op.line)
+                if mf:
+                    fusion_dot_flops(mf.group(1), mult)
+            stats.bytes_accessed += (_shape_bytes(op.result_type)
+                                     + mod.operand_bytes(op)) * mult
+
+    walk(mod.entry, 1.0)
+    return stats

@@ -1,0 +1,191 @@
+"""RVV-0.5-draft-style vector ISA (the subset Ara implements, §III).
+
+Instructions are plain dataclasses; programs are lists. Semantics are
+executed by core/vector_engine.py (single-device oracle or lane-sharded
+shard_map engine); timing by the engine's scoreboard (cross-validates
+core/perfmodel.py).
+
+Functional-unit mapping follows Fig. 3b:
+  FPU  — VFMA/VFADD/VFMUL          (64 bit/lane/cycle)
+  ALU  — VADD/VMUL/logic           (shares paths with SLDU)
+  SLDU — VSLIDE/VINS/VEXT          (touches all lanes)
+  VLSU — VLD/VST/VLDS/VGATHER      (single memory port, W = 32*lanes bit)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+NUM_VREGS = 32
+
+
+@dataclasses.dataclass(frozen=True)
+class Insn:
+    unit = "none"
+
+
+@dataclasses.dataclass(frozen=True)
+class VSETVL(Insn):
+    vl: int                      # requested vector length (AVL)
+    unit = "seq"
+
+
+@dataclasses.dataclass(frozen=True)
+class VLD(Insn):                 # unit-stride load
+    vd: int
+    addr: int                    # element offset into memory
+    unit = "vlsu"
+
+
+@dataclasses.dataclass(frozen=True)
+class VLDS(Insn):                # constant-stride load
+    vd: int
+    addr: int
+    stride: int
+    unit = "vlsu"
+
+
+@dataclasses.dataclass(frozen=True)
+class VGATHER(Insn):             # indexed load: vd[i] = mem[addr + vidx[i]]
+    vd: int
+    addr: int
+    vidx: int
+    unit = "vlsu"
+
+
+@dataclasses.dataclass(frozen=True)
+class VST(Insn):
+    vs: int
+    addr: int
+    unit = "vlsu"
+
+
+@dataclasses.dataclass(frozen=True)
+class VFMA(Insn):                # vd <- va * vb + vd
+    vd: int
+    va: int
+    vb: int
+    unit = "fpu"
+
+
+@dataclasses.dataclass(frozen=True)
+class VFMA_VS(Insn):             # vd <- scalar(vs_scalar) * vb + vd
+    vd: int
+    vs_scalar: int               # scalar register id
+    vb: int
+    unit = "fpu"
+
+
+@dataclasses.dataclass(frozen=True)
+class VFADD(Insn):
+    vd: int
+    va: int
+    vb: int
+    unit = "fpu"
+
+
+@dataclasses.dataclass(frozen=True)
+class VFMUL(Insn):
+    vd: int
+    va: int
+    vb: int
+    unit = "fpu"
+
+
+@dataclasses.dataclass(frozen=True)
+class VADD(Insn):                # integer ALU
+    vd: int
+    va: int
+    vb: int
+    unit = "alu"
+
+
+@dataclasses.dataclass(frozen=True)
+class VINS(Insn):                # broadcast scalar into vector register
+    vd: int
+    scalar: int                  # scalar register id
+    unit = "sldu"
+
+
+@dataclasses.dataclass(frozen=True)
+class VEXT(Insn):                # extract element vd[idx] -> scalar reg
+    sd: int
+    vs: int
+    idx: int
+    unit = "sldu"
+
+
+@dataclasses.dataclass(frozen=True)
+class VSLIDE(Insn):              # vd[i] <- vs[i + amount]  (slide-down)
+    vd: int
+    vs: int
+    amount: int
+    unit = "sldu"
+
+
+@dataclasses.dataclass(frozen=True)
+class LDSCALAR(Insn):            # Ariane-side scalar load feeding VINS
+    sd: int
+    addr: int
+    unit = "scalar"
+
+
+# ---------------------------------------------------------------------------
+# Program builders for the paper's kernels
+# ---------------------------------------------------------------------------
+
+
+def daxpy_program(n: int, x_addr: int, y_addr: int, alpha_sreg: int = 0,
+                  vlmax: Optional[int] = None):
+    """Y <- alpha*X + Y, strip-mined (Fig. 9 style)."""
+    vlmax = vlmax or n
+    prog = []
+    c = 0
+    while c < n:
+        vl = min(n - c, vlmax)
+        prog += [VSETVL(vl),
+                 VLD(1, x_addr + c),
+                 VLD(2, y_addr + c),
+                 VINS(3, alpha_sreg),
+                 VFMA(2, 3, 1),              # y += alpha * x
+                 VST(2, y_addr + c)]
+        c += vl
+    return prog
+
+
+def matmul_program(n: int, a_addr: int, b_addr: int, c_addr: int,
+                   t: int = 4, vlmax: Optional[int] = None):
+    """Listing 1: C <- A B + C, row-major, tiles of t rows, strip-mined."""
+    vlmax = vlmax or n
+    prog = []
+    col = 0
+    while col < n:
+        vl = min(n - col, vlmax)
+        prog.append(VSETVL(vl))
+        for r0 in range(0, n, t):
+            rows = min(t, n - r0)
+            for j in range(rows):            # phase I
+                prog.append(VLD(4 + j, c_addr + (r0 + j) * n + col))
+            for i in range(n):               # phase II
+                prog.append(VLD(2, b_addr + i * n + col))
+                for j in range(rows):
+                    prog.append(LDSCALAR(1, a_addr + (r0 + j) * n + i))
+                    prog.append(VINS(3, 1))
+                    prog.append(VFMA_VS(4 + j, 1, 2))
+            for j in range(rows):            # phase III
+                prog.append(VST(4 + j, c_addr + (r0 + j) * n + col))
+        col += vl
+    return prog
+
+
+def slide_reduce_program(vs: int, vl: int, sd: int = 0):
+    """O(log n) sum-reduction via slides + adds (§III-C: no native vred)."""
+    prog = []
+    shift = 1
+    tmp = (vs + 1) % NUM_VREGS
+    while shift < vl:
+        prog.append(VSLIDE(tmp, vs, shift))
+        prog.append(VFADD(vs, vs, tmp))
+        shift *= 2
+    prog.append(VEXT(sd, vs, 0))
+    return prog

@@ -1,0 +1,223 @@
+"""Ara cycle-level analytical performance model (the faithful reproduction).
+
+Reproduces the paper's published measurements from first principles plus a
+small number of calibrated micro-architectural constants:
+
+DERIVED from the paper's architecture (not fitted):
+  - peak = 2*lanes DP-FLOP/cycle (one FMA/lane/cycle, 64-bit datapath)
+  - memory BW = 32*lanes bit/cycle  (2 B/DP-FLOP provisioning, §III-D)
+  - issue interval delta = 5 cycles/vector-FMA (Appendix A pipeline diagram)
+  - per-lane elements e = vl/lanes; VLMAX = lanes*64 DP elements (16 KiB/lane
+    VRF over 32 regs); strip-mining loop per Fig. 9 with row tiles t=4
+  - DAXPY: cycles = 6n/lanes + 24 — §V-B gives ideal 96 vs measured 120
+    at n=256, l=16: the +24 is the paper's own configuration overhead
+
+CALIBRATED (documented fits, validated in tests/benchmarks vs the paper):
+  - L_MEM: fixed AXI burst startup per vector load/store row
+  - DRAIN: pipeline refill between dependent blocks
+  - conv: gamma1 (VLSU<->FPU banking-conflict share on concurrent loads),
+    +1 cycle/vmadd sub-eight-bank occupancy penalty when e < 8 (§V-C)
+
+The Hwacha comparator (Table I) is modeled as the paper describes the public
+Hwacha: same vector pipeline but memory capped at 128 bit/cycle and a slower
+effective issue path (fitted delta_hw), labeled clearly as a model.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+from repro.configs.ara import (AraConfig, NOMINAL_CLOCK_GHZ, PAPER_TABLE3)
+
+# calibrated constants (grid-fit to Table I + §V; rms error 5.4%, worst
+# |err| 10.8%, marquee 256x256 points within 3% — see tests/test_perfmodel)
+L_MEM = 15.0       # cycles: burst startup per vector load/store row
+DRAIN = 8.0        # cycles: per-block pipeline drain/refill
+VLD_ISSUE = 2.0    # cycles: B-row vld + pointer bump issue slots per column
+C_MEM_LANE = 1.25  # cycles/lane: VLSU collection/arbitration per burst
+C_COL_LANE = 1.25 / 8.0  # cycles/lane: per-column operand-queue bubble
+CONV_GAMMA1 = 0.2  # banking-conflict share of concurrent VLSU traffic
+CONV_SHORT_PEN = 0.5  # cycles/vmadd when a vector spans < 8 banks
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelPerf:
+    name: str
+    cycles: float
+    flops: float
+    lanes: int
+
+    @property
+    def flop_per_cycle(self) -> float:
+        return self.flops / self.cycles
+
+    @property
+    def utilization(self) -> float:
+        return self.flop_per_cycle / (2 * self.lanes)
+
+    def gflops(self, clock_ghz: float) -> float:
+        return self.flop_per_cycle * clock_ghz
+
+
+# ---------------------------------------------------------------------------
+# MATMUL  (C <- A B + C, n x n, Fig. 9 / Listing 1 algorithm)
+# ---------------------------------------------------------------------------
+
+
+def matmul_cycles(cfg: AraConfig, n: int, t: int = 4,
+                  issue_interval: float | None = None,
+                  mem_bytes_per_cycle: float | None = None) -> float:
+    lanes = cfg.lanes
+    delta = issue_interval if issue_interval is not None \
+        else cfg.issue_interval_cycles
+    bw = mem_bytes_per_cycle if mem_bytes_per_cycle is not None \
+        else cfg.mem_bytes_per_cycle
+    vlmax = cfg.vlmax_dp
+    cycles = 0.0
+    c = 0
+    while c < n:
+        vl = min(n - c, vlmax)
+        e = vl / lanes                       # elements per lane
+        row_mem = 8.0 * vl / bw              # one row's bytes / BW
+        n_blocks = math.ceil(n / t)
+        per_block = 0.0
+        # phase I + III: t C-row loads + t stores, burst startup each
+        per_block += 2 * t * (row_mem + L_MEM)
+        # phase II: n columns; per column one B-row vld (chained) and t vmadds
+        issue_cycles = t * delta + VLD_ISSUE
+        fpu_cycles = t * e
+        # B row streams under compute; VLSU word collection across lanes
+        # adds arbitration latency proportional to lane count (§VI-C)
+        mem_cycles = row_mem + C_MEM_LANE * lanes
+        per_col = max(issue_cycles, fpu_cycles, mem_cycles) \
+            + C_COL_LANE * lanes
+        per_block += n * per_col
+        per_block += DRAIN
+        cycles += n_blocks * per_block + cfg.config_overhead_cycles
+        c += vl
+    return cycles
+
+
+def matmul_perf(cfg: AraConfig, n: int, **kw) -> KernelPerf:
+    return KernelPerf("matmul", matmul_cycles(cfg, n, **kw),
+                      2.0 * n ** 3, cfg.lanes)
+
+
+def matmul_issue_bound(cfg: AraConfig, n: int) -> float:
+    """Eq. (2)/(3): omega <= Pi * tau/delta, tau = 2n/Pi (FLOP/cycle)."""
+    pi = cfg.peak_dp_flop_per_cycle
+    tau = 2.0 * n / pi
+    return pi * min(1.0, tau / cfg.issue_interval_cycles)
+
+
+def matmul_roofline(cfg: AraConfig, n: int) -> float:
+    """Classic roofline bound (FLOP/cycle): min(peak, beta * I)."""
+    intensity = n / 16.0                      # Eq. (1)
+    return min(cfg.peak_dp_flop_per_cycle,
+               cfg.mem_bytes_per_cycle * intensity)
+
+
+# ---------------------------------------------------------------------------
+# DAXPY  (Y <- aX + Y, length n)
+# ---------------------------------------------------------------------------
+
+
+def daxpy_cycles(cfg: AraConfig, n: int) -> float:
+    # memory-bound: 24n bytes over 4*lanes B/cycle = 6n/lanes cycles,
+    # plus the paper's measured 24-cycle configuration overhead (§V-B)
+    return 6.0 * n / cfg.lanes + cfg.config_overhead_cycles
+
+
+def daxpy_perf(cfg: AraConfig, n: int) -> KernelPerf:
+    return KernelPerf("daxpy", daxpy_cycles(cfg, n), 2.0 * n, cfg.lanes)
+
+
+# ---------------------------------------------------------------------------
+# DCONV  (GoogLeNet layer-1 tensor convolution, §IV/§V-C)
+# ---------------------------------------------------------------------------
+
+
+def dconv_cycles(cfg: AraConfig, out_ch: int = 64, in_ch: int = 3,
+                 kh: int = 7, kw: int = 7, rows: int = 112,
+                 cols: int = 112) -> float:
+    lanes = cfg.lanes
+    e = cols / lanes
+    n_vmadd = in_ch * kh * kw                 # FMAs per output row (147)
+    fpu = n_vmadd * max(cfg.issue_interval_cycles, e)
+    # input rows streamed per output row: in_ch * kh vlds
+    mem = in_ch * kh * (8.0 * cols / cfg.mem_bytes_per_cycle + L_MEM)
+    per_row = max(fpu, mem) + CONV_GAMMA1 * mem
+    if e < cfg.banks_per_lane:                # vector doesn't fill the banks
+        per_row += CONV_SHORT_PEN * n_vmadd
+    total_rows = out_ch * rows
+    return total_rows * per_row + cfg.config_overhead_cycles
+
+
+def dconv_perf(cfg: AraConfig, **kw) -> KernelPerf:
+    flops = 2.0 * 64 * 3 * 7 * 7 * 112 * 112
+    return KernelPerf("dconv", dconv_cycles(cfg, **kw), flops, cfg.lanes)
+
+
+# ---------------------------------------------------------------------------
+# Hwacha comparator (public memory system: 128 bit/cycle, §V-D)
+# ---------------------------------------------------------------------------
+# The paper attributes public-Hwacha's low utilization to its memory system
+# (no banked L2; a coherence broadcast hub capping delivery at 128 bit/cycle,
+# "starving the FMA units"). The three published points (Table I, n=32) fit
+# a per-element delivery model almost exactly (<2%):
+#     per-column cycles = H_FIXED + H_PER_ELEM * e,   e = vl/lanes
+# i.e. the hub delivers operands at a fixed per-lane rate ~1/4.7 of Ara's
+# banked VRF. Fitted constants, clearly a comparator model, not RTL.
+
+H_FIXED = 18.3
+H_PER_ELEM = 4.7
+
+
+def hwacha_matmul_perf(lanes: int, n: int, t: int = 4) -> KernelPerf:
+    vl = min(n, lanes * 64)
+    e = vl / lanes
+    row_mem = 8.0 * vl / 16.0            # 128 bit/cycle cap
+    per_col = H_FIXED + H_PER_ELEM * e
+    per_block = 2 * t * (row_mem + L_MEM) + n * per_col + DRAIN
+    cycles = (math.ceil(n / t) * per_block + 24) * math.ceil(n / vl)
+    return KernelPerf("hwacha-matmul", cycles, 2.0 * n ** 3, lanes)
+
+
+# ---------------------------------------------------------------------------
+# Power / efficiency model (Table III)
+# ---------------------------------------------------------------------------
+
+# linear fits P(l) = p0 + p1*l (mW) per kernel over the four instances
+_POWER_POINTS = {k: [(l, PAPER_TABLE3[l][i]) for l in (2, 4, 8, 16)]
+                 for i, k in ((3, "matmul"), (4, "dconv"), (5, "daxpy"))}
+
+
+def _linfit(points):
+    n = len(points)
+    sx = sum(p[0] for p in points)
+    sy = sum(p[1] for p in points)
+    sxx = sum(p[0] ** 2 for p in points)
+    sxy = sum(p[0] * p[1] for p in points)
+    b = (n * sxy - sx * sy) / (n * sxx - sx * sx)
+    a = (sy - b * sx) / n
+    return a, b
+
+
+POWER_FIT = {k: _linfit(v) for k, v in _POWER_POINTS.items()}
+
+
+def power_mw(kernel: str, lanes: int) -> float:
+    a, b = POWER_FIT[kernel]
+    return a + b * lanes
+
+
+def efficiency_gflops_per_w(kernel: str, lanes: int, n: int = 256) -> float:
+    cfg = AraConfig(lanes=lanes)
+    clock = NOMINAL_CLOCK_GHZ[lanes]
+    if kernel == "matmul":
+        perf = matmul_perf(cfg, n)
+    elif kernel == "daxpy":
+        perf = daxpy_perf(cfg, n)
+    else:
+        perf = dconv_perf(cfg)
+    return perf.gflops(clock) / (power_mw(kernel, lanes) / 1000.0)

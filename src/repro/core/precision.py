@@ -1,0 +1,51 @@
+"""Multi-precision policy (paper §III-E4 -> TPU).
+
+Ara subdivides its 64-bit lane datapath: 1x64 / 2x32 / 4x16 / 8x8 per cycle
+— throughput doubles per precision halving. The TPU analogue: MXU bf16 at
+197 TFLOP/s vs fp32 at ~0.5x, plus int8 at ~2x (v5e 394 TOPS). This module
+is the single source for per-precision peaks (roofline denominators) and
+the cast policy used by models (params fp32/bf16 master, compute dtype
+configurable, fp32 accumulation — matching the kernels' behaviour).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+# TPU v5e per-chip peaks
+PEAKS_FLOPS = {
+    "float32": 98.5e12,      # ~0.5x bf16 (fp32 via MXU passes)
+    "bfloat16": 197e12,
+    "float16": 197e12,
+    "int8": 394e12,
+}
+
+# Ara's per-precision peak (FLOP/cycle/lane), the paper's datapath split
+ARA_FLOP_PER_CYCLE_PER_LANE = {64: 2, 32: 4, 16: 8, 8: 16}
+
+
+@dataclasses.dataclass(frozen=True)
+class Policy:
+    param_dtype: str = "float32"
+    compute_dtype: str = "bfloat16"
+    accum_dtype: str = "float32"
+    cache_dtype: str = "bfloat16"
+
+    def peak_flops(self) -> float:
+        return PEAKS_FLOPS[self.compute_dtype]
+
+    def cast_params(self, tree):
+        import jax
+        dt = jnp.dtype(self.compute_dtype)
+        return jax.tree_util.tree_map(
+            lambda x: x.astype(dt) if jnp.issubdtype(x.dtype, jnp.floating)
+            else x, tree)
+
+
+def bytes_per_element(dtype: str) -> int:
+    return jnp.dtype(dtype).itemsize
+
+
+def speedup_vs_fp32(dtype: str) -> float:
+    return PEAKS_FLOPS[dtype] / PEAKS_FLOPS["float32"]

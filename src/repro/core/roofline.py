@@ -1,0 +1,86 @@
+"""Three-term TPU roofline from compiled dry-run artifacts (DESIGN.md §8).
+
+    compute    = FLOPs_per_device / PEAK_FLOPS
+    memory     = bytes_per_device / HBM_BW
+    collective = collective_bytes_per_device / ICI_LINK_BW
+
+Terms are seconds-per-step for one device; the dominant term is the
+bottleneck. MODEL_FLOPS = 6*N*D (6*N_active*D for MoE) measures how much of
+the compiled compute is "useful" (remat/dispatch waste shows up here).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.core.hlo_analysis import HLOStats, analyze
+
+# TPU v5e (assignment constants)
+PEAK_FLOPS_BF16 = 197e12      # per chip
+HBM_BW = 819e9                # B/s per chip
+ICI_LINK_BW = 50e9            # B/s per link
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    n_devices: int
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    hlo_flops_per_dev: float
+    hlo_bytes_per_dev: float
+    coll_bytes_per_dev: float
+    model_flops_total: float
+    useful_ratio: float          # MODEL_FLOPS / (HLO_FLOPs * n_dev)
+    bottleneck: str
+    achievable_step_s: float     # max of the three terms
+    mfu_bound: float             # model_flops / (n_dev*peak*achievable_step)
+    detail: dict
+
+    def row(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def model_flops(cfg: ArchConfig, shape: ShapeConfig) -> float:
+    """6*N*D for train; 2*N*D for a forward-only prefill; per-new-token
+    2*N_active for decode."""
+    n_active = cfg.active_param_count()
+    tokens = shape.global_batch * shape.seq_len
+    if shape.kind == "train":
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        return 2.0 * n_active * tokens
+    # decode: one new token per sequence
+    return 2.0 * n_active * shape.global_batch
+
+
+def build(cfg: ArchConfig, shape: ShapeConfig, mesh_name: str, n_devices: int,
+          hlo_text: str, cost: Optional[dict] = None) -> Roofline:
+    st = analyze(hlo_text, n_devices=n_devices)
+    mf = model_flops(cfg, shape)
+    compute_s = st.flops / PEAK_FLOPS_BF16
+    memory_s = st.bytes_accessed / HBM_BW
+    collective_s = st.collective_bytes / ICI_LINK_BW
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    bottleneck = max(terms, key=terms.get)
+    achievable = max(terms.values())
+    total_hlo_flops = st.flops * n_devices
+    useful = mf / total_hlo_flops if total_hlo_flops else 0.0
+    mfu = (mf / (n_devices * PEAK_FLOPS_BF16 * achievable)
+           if achievable > 0 else 0.0)
+    detail = st.as_dict()
+    if cost:
+        detail["xla_cost_analysis"] = {k: cost.get(k) for k in
+                                       ("flops", "bytes accessed")}
+    return Roofline(
+        arch=cfg.name, shape=shape.name, mesh=mesh_name, n_devices=n_devices,
+        compute_s=compute_s, memory_s=memory_s, collective_s=collective_s,
+        hlo_flops_per_dev=st.flops, hlo_bytes_per_dev=st.bytes_accessed,
+        coll_bytes_per_dev=st.collective_bytes,
+        model_flops_total=mf, useful_ratio=useful, bottleneck=bottleneck,
+        achievable_step_s=achievable, mfu_bound=mfu, detail=detail)

@@ -1,0 +1,73 @@
+"""setvl-style strip-mining (DESIGN.md §2).
+
+The paper's strip-mined loop (Fig. 9, line 3: ``vl = min(n - c, VLMAX)``)
+lets one binary run on any lane count. Our analogues:
+
+- ``stripmined_grads``: gradient accumulation — the global batch is streamed
+  through a lax.scan in VLMAX-sized strips so activation memory is bounded
+  by the strip, not the batch.
+- ``stripmine_map``: generic scan-based strip loop over a leading axis.
+- ``fuse_steps``: the issue-rate fix — the paper shows short vectors are
+  bound by the 5-cycle issue interval (Eq. 2); the TPU analogue is host
+  dispatch per step. Fusing K steps into one dispatched scan amortizes the
+  "instruction issue" exactly like longer vectors amortize fetch.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+def stripmine_map(fn, xs, strip: int):
+    """Apply ``fn`` over leading-axis strips of ``xs`` (a pytree); concat."""
+    n = jax.tree_util.tree_leaves(xs)[0].shape[0]
+    assert n % strip == 0, (n, strip)
+    folded = jax.tree_util.tree_map(
+        lambda a: a.reshape((n // strip, strip) + a.shape[1:]), xs)
+    _, ys = jax.lax.scan(lambda c, x: (c, fn(x)), None, folded)
+    return jax.tree_util.tree_map(
+        lambda a: a.reshape((n,) + a.shape[2:]), ys)
+
+
+def stripmined_grads(loss_fn, params, batch, n_strips: int):
+    """Gradient accumulation via scan. loss_fn(params, microbatch) ->
+    (loss, metrics). Returns ((loss, metrics), grads) averaged over strips."""
+    b = jax.tree_util.tree_leaves(batch)[0].shape[0]
+    assert b % n_strips == 0, (b, n_strips)
+    micro = jax.tree_util.tree_map(
+        lambda a: a.reshape((n_strips, b // n_strips) + a.shape[1:]), batch)
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def body(carry, mb):
+        (loss_sum, metrics_sum, grads_sum) = carry
+        (loss, metrics), grads = grad_fn(params, mb)
+        loss_sum = loss_sum + loss
+        metrics_sum = jax.tree_util.tree_map(jnp.add, metrics_sum, metrics)
+        grads_sum = jax.tree_util.tree_map(jnp.add, grads_sum, grads)
+        return (loss_sum, metrics_sum, grads_sum), None
+
+    mb0 = jax.tree_util.tree_map(lambda a: a[0], micro)
+    (l0, m0), g0 = grad_fn(params, mb0)
+    rest = jax.tree_util.tree_map(lambda a: a[1:], micro)
+    (loss, metrics, grads), _ = jax.lax.scan(body, (l0, m0, g0), rest)
+    k = jnp.float32(n_strips)
+    return ((loss / k, jax.tree_util.tree_map(lambda x: x / k, metrics)),
+            jax.tree_util.tree_map(lambda g: g / k, grads))
+
+
+def fuse_steps(step_fn, k: int):
+    """Fuse ``k`` sequential (state, batch_i) steps into one dispatch.
+
+    step_fn: (state, batch) -> (state, metrics). Returns a function
+    (state, stacked_batch) -> (state, stacked_metrics) executing a scan —
+    one XLA dispatch for k steps (issue-rate amortization, Eq. 2 analogue).
+    """
+    def fused(state, stacked_batch):
+        def body(st, b):
+            st, m = step_fn(st, b)
+            return st, m
+        return jax.lax.scan(body, state, stacked_batch)
+    return fused

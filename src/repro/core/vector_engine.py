@@ -1,0 +1,320 @@
+"""Ara vector engine in JAX: lane-parallel execution of core/isa.py programs.
+
+Two execution backends with identical semantics (tested against each other):
+
+- ``ReferenceEngine`` — single-device jnp oracle.
+- ``LaneEngine`` — shard_map over a ``lanes`` mesh axis. Element ``i`` of a
+  vector register lives on lane ``i % lanes`` (the paper's element-partitioned
+  VRF, §III-E2). Arithmetic is lane-local; VSLIDE/VEXT go through ppermute/
+  psum (the SLDU); VST/VEXT reconcile replicated memory via psum (the VLSU —
+  the only all-lane units, exactly the paper's scalability argument).
+
+``simulate_timing`` is an event-driven scoreboard (issue interval, per-unit
+occupancy, chaining lag) giving an instruction-accurate cycle estimate that
+cross-validates the closed-form core/perfmodel.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.ara import AraConfig
+from repro.core import isa
+from repro.core.perfmodel import C_MEM_LANE, L_MEM
+
+CHAIN_LAG = 4.0   # cycles: consumer starts this far behind producer (chaining)
+
+
+# ---------------------------------------------------------------------------
+# Reference engine (single device oracle)
+# ---------------------------------------------------------------------------
+
+
+class ReferenceEngine:
+    def __init__(self, cfg: AraConfig, vlmax: Optional[int] = None,
+                 dtype=jnp.float64):
+        self.cfg = cfg
+        self.vlmax = vlmax or cfg.vlmax_dp
+        self.dtype = dtype
+
+    def run(self, program, memory, sregs: Optional[dict] = None):
+        mem = jnp.asarray(memory, self.dtype)
+        v = jnp.zeros((isa.NUM_VREGS, self.vlmax), self.dtype)
+        s = dict(sregs or {})
+        vl = self.vlmax
+        for ins in program:
+            t = type(ins)
+            if t is isa.VSETVL:
+                vl = min(ins.vl, self.vlmax)
+            elif t is isa.VLD:
+                v = v.at[ins.vd, :vl].set(
+                    jax.lax.dynamic_slice(mem, (ins.addr,), (vl,)))
+            elif t is isa.VLDS:
+                idx = ins.addr + ins.stride * jnp.arange(vl)
+                v = v.at[ins.vd, :vl].set(mem[idx])
+            elif t is isa.VGATHER:
+                idx = ins.addr + v[ins.vidx, :vl].astype(jnp.int32)
+                v = v.at[ins.vd, :vl].set(mem[idx])
+            elif t is isa.VST:
+                mem = jax.lax.dynamic_update_slice(mem, v[ins.vs, :vl],
+                                                   (ins.addr,))
+            elif t is isa.VFMA:
+                v = v.at[ins.vd, :vl].set(
+                    v[ins.va, :vl] * v[ins.vb, :vl] + v[ins.vd, :vl])
+            elif t is isa.VFMA_VS:
+                v = v.at[ins.vd, :vl].set(
+                    s[ins.vs_scalar] * v[ins.vb, :vl] + v[ins.vd, :vl])
+            elif t is isa.VFADD:
+                v = v.at[ins.vd, :vl].set(v[ins.va, :vl] + v[ins.vb, :vl])
+            elif t is isa.VFMUL:
+                v = v.at[ins.vd, :vl].set(v[ins.va, :vl] * v[ins.vb, :vl])
+            elif t is isa.VADD:
+                v = v.at[ins.vd, :vl].set(v[ins.va, :vl] + v[ins.vb, :vl])
+            elif t is isa.VINS:
+                v = v.at[ins.vd, :vl].set(jnp.full((vl,), s[ins.scalar],
+                                                   self.dtype))
+            elif t is isa.VEXT:
+                s[ins.sd] = v[ins.vs, ins.idx]
+            elif t is isa.VSLIDE:
+                src = v[ins.vs, :vl]
+                slid = jnp.roll(src, -ins.amount)
+                mask = jnp.arange(vl) < (vl - ins.amount)
+                v = v.at[ins.vd, :vl].set(jnp.where(mask, slid, 0))
+            elif t is isa.LDSCALAR:
+                s[ins.sd] = mem[ins.addr]
+            else:
+                raise ValueError(ins)
+        return np.asarray(mem), s
+
+
+# ---------------------------------------------------------------------------
+# Lane-parallel engine (shard_map)
+# ---------------------------------------------------------------------------
+
+
+class LaneEngine:
+    """Same semantics, vector registers physically lane-sharded.
+
+    Local layout: vregs (NUM_VREGS, lanes_local=1 per device, vlmax/lanes)
+    — device ``l`` holds elements l, l+lanes, l+2*lanes, ... (interleaved,
+    barber's-pole equivalent). Memory is replicated (host DRAM analogue);
+    VST reconciles with psum, making the VLSU the single all-lane unit.
+    """
+
+    def __init__(self, cfg: AraConfig, mesh, axis: str = "lanes",
+                 vlmax: Optional[int] = None, dtype=jnp.float32):
+        self.cfg = cfg
+        self.mesh = mesh
+        self.axis = axis
+        self.lanes = mesh.shape[axis]
+        vlmax = vlmax or cfg.vlmax_dp
+        self.vlmax = (vlmax // self.lanes) * self.lanes
+        self.dtype = dtype
+
+    def run(self, program, memory, sregs: Optional[dict] = None):
+        lanes = self.lanes
+        e_max = self.vlmax // lanes
+        program = tuple(program)
+        sregs = dict(sregs or {})
+        n_s = 32                              # fixed scalar register file
+        s0 = np.zeros((n_s,), np.float64)
+        for k, val in sregs.items():
+            s0[k] = val
+
+        def device_fn(mem, svec):
+            lane = jax.lax.axis_index(self.axis)
+            v = jnp.zeros((isa.NUM_VREGS, e_max), self.dtype)
+            s = svec.astype(self.dtype)
+            vl = self.vlmax
+
+            def lvl(vl):   # local element count on this lane
+                return -(-vl // lanes)  # ceil; masked via element index
+
+            def owned_mask(vl):
+                # element ids owned by this lane: lane + k*lanes < vl
+                ids = lane + jnp.arange(e_max) * lanes
+                return ids < vl, ids
+
+            for ins in program:
+                t = type(ins)
+                if t is isa.VSETVL:
+                    vl = min(ins.vl, self.vlmax)
+                elif t is isa.VLD:
+                    mask, ids = owned_mask(vl)
+                    vals = mem[ins.addr + ids * (ids < vl)]
+                    v = v.at[ins.vd].set(jnp.where(mask, vals, 0))
+                elif t is isa.VLDS:
+                    mask, ids = owned_mask(vl)
+                    vals = mem[ins.addr + ins.stride * ids * (ids < vl)]
+                    v = v.at[ins.vd].set(jnp.where(mask, vals, 0))
+                elif t is isa.VST:
+                    mask, ids = owned_mask(vl)
+                    gidx = ins.addr + ids
+                    valid = mask & (gidx < mem.shape[0])
+                    gidx_safe = jnp.where(valid, gidx, 0)
+                    vals = jnp.where(valid, v[ins.vs], 0).astype(mem.dtype)
+                    upd = jnp.zeros_like(mem).at[gidx_safe].add(vals)
+                    cnt = jnp.zeros(mem.shape, jnp.int32).at[gidx_safe].add(
+                        valid.astype(jnp.int32))
+                    upd = jax.lax.psum(upd, self.axis)     # VLSU collect
+                    cnt = jax.lax.psum(cnt, self.axis)
+                    mem = jnp.where(cnt > 0, upd, mem)
+                elif t is isa.VFMA:
+                    v = v.at[ins.vd].set(v[ins.va] * v[ins.vb] + v[ins.vd])
+                elif t is isa.VFMA_VS:
+                    v = v.at[ins.vd].set(s[ins.vs_scalar] * v[ins.vb]
+                                         + v[ins.vd])
+                elif t is isa.VFADD:
+                    v = v.at[ins.vd].set(v[ins.va] + v[ins.vb])
+                elif t is isa.VFMUL:
+                    v = v.at[ins.vd].set(v[ins.va] * v[ins.vb])
+                elif t is isa.VADD:
+                    v = v.at[ins.vd].set(v[ins.va] + v[ins.vb])
+                elif t is isa.VINS:
+                    v = v.at[ins.vd].set(jnp.full((e_max,), s[ins.scalar],
+                                                  self.dtype))
+                elif t is isa.VEXT:
+                    mask, ids = owned_mask(vl)
+                    hit = (ids == ins.idx) & mask
+                    val = jax.lax.psum(jnp.sum(jnp.where(hit, v[ins.vs], 0)),
+                                       self.axis)           # SLDU extract
+                    s = s.at[ins.sd].set(val)
+                elif t is isa.VSLIDE:
+                    # element i <- element i+amount: owner of i+amount is
+                    # lane (lane+amount) % lanes; ppermute through the SLDU
+                    k = ins.amount
+                    src_lane_off = k % lanes
+                    perm = [((l + src_lane_off) % lanes, l)
+                            for l in range(lanes)]
+                    moved = jax.lax.ppermute(v[ins.vs], self.axis, perm)
+                    # received data is lane (lane+k)%lanes's column; its
+                    # j-th slot is element (lane+k)%lanes + j*lanes; we need
+                    # element lane + i*lanes + k = base + (i + shift)*lanes
+                    shift = (lane + src_lane_off) // lanes + k // lanes
+                    rolled = jnp.roll(moved, -shift, axis=0)
+                    ids = lane + jnp.arange(e_max) * lanes
+                    valid = (ids + k) < vl
+                    v = v.at[ins.vd].set(jnp.where(valid, rolled, 0))
+                elif t is isa.LDSCALAR:
+                    s = s.at[ins.sd].set(mem[ins.addr])
+                else:
+                    raise ValueError(ins)
+            return mem, s
+
+        from jax.sharding import PartitionSpec as PS
+        fn = jax.shard_map(device_fn, mesh=self.mesh,
+                           in_specs=(PS(), PS()), out_specs=(PS(), PS()),
+                           check_vma=False)
+        mem, s = fn(jnp.asarray(memory, self.dtype), jnp.asarray(s0))
+        return np.asarray(mem), {k: np.asarray(s)[k] for k in range(n_s)}
+
+
+# ---------------------------------------------------------------------------
+# Scoreboard timing simulation (no data movement)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class TimingReport:
+    cycles: float
+    unit_busy: dict
+    n_insns: int
+
+    def flop_per_cycle(self, flops: float) -> float:
+        return flops / self.cycles
+
+
+ISSUE_COST = {  # Ariane dispatch slots per instruction (Appendix A)
+    isa.VSETVL: 1, isa.VLD: 2, isa.VLDS: 2, isa.VGATHER: 2, isa.VST: 2,
+    isa.VFMA: 1, isa.VFMA_VS: 1, isa.VFADD: 1, isa.VFMUL: 1, isa.VADD: 1,
+    isa.VINS: 1, isa.VEXT: 1, isa.VSLIDE: 1, isa.LDSCALAR: 3,
+}
+
+
+def simulate_timing(program, cfg: AraConfig,
+                    vlmax: Optional[int] = None) -> TimingReport:
+    lanes = cfg.lanes
+    vlmax = vlmax or cfg.vlmax_dp
+    bw = cfg.mem_bytes_per_cycle
+    issue_t = 0.0
+    unit_free = {"fpu": 0.0, "alu": 0.0, "sldu": 0.0, "vlsu": 0.0,
+                 "scalar": 0.0}
+    busy = {k: 0.0 for k in unit_free}
+    reg_start = {}          # vreg -> exec start (chaining reference)
+    reg_end = {}
+    sreg_end = {}
+    vl = vlmax
+
+    def vdeps(ins):
+        t = type(ins)
+        if t in (isa.VFMA,):
+            return [ins.va, ins.vb, ins.vd]
+        if t is isa.VFMA_VS:
+            return [ins.vb, ins.vd]
+        if t in (isa.VFADD, isa.VFMUL, isa.VADD):
+            return [ins.va, ins.vb]
+        if t is isa.VST:
+            return [ins.vs]
+        if t is isa.VSLIDE:
+            return [ins.vs]
+        if t is isa.VEXT:
+            return [ins.vs]
+        if t is isa.VGATHER:
+            return [ins.vidx]
+        return []
+
+    def vdst(ins):
+        return getattr(ins, "vd", None)
+
+    cycles = 0.0
+    n = 0
+    for ins in program:
+        n += 1
+        t = type(ins)
+        issue_t += ISSUE_COST.get(t, 1)
+        if t is isa.VSETVL:
+            vl = min(ins.vl, vlmax)
+            continue
+        e = max(vl / lanes, 1.0)
+        # (occupancy, latency): back-to-back bursts pipeline at occupancy
+        # rate; startup/collection latency delays only dependants
+        if t in (isa.VLD, isa.VLDS, isa.VGATHER, isa.VST):
+            occ = 8.0 * vl / bw
+            if t in (isa.VLDS, isa.VGATHER):
+                occ = float(vl)           # element-granular, no burst
+            unit, lat = "vlsu", occ + L_MEM + C_MEM_LANE * lanes
+        elif t is isa.LDSCALAR:
+            unit, occ, lat = "scalar", 1.0, 2.0
+        elif t in (isa.VINS, isa.VEXT, isa.VSLIDE):
+            unit, occ = "sldu", e + (lanes / 8.0)
+            lat = occ
+        else:
+            unit, occ = "fpu", e
+            lat = occ + CHAIN_LAG
+        dep_start = 0.0
+        for r in vdeps(ins):
+            if r in reg_start:
+                dep_start = max(dep_start, reg_start[r] + CHAIN_LAG)
+        if t is isa.VINS or t is isa.VFMA_VS:
+            sid = getattr(ins, "scalar", getattr(ins, "vs_scalar", None))
+            if sid in sreg_end:
+                dep_start = max(dep_start, sreg_end[sid])
+        start = max(unit_free[unit], issue_t, dep_start)
+        end = start + lat
+        unit_free[unit] = start + occ
+        busy[unit] += occ
+        d = vdst(ins)
+        if d is not None:
+            reg_start[d] = start
+            reg_end[d] = end
+        if t is isa.LDSCALAR:
+            sreg_end[ins.sd] = end
+        if t is isa.VEXT:
+            sreg_end[ins.sd] = end
+        cycles = max(cycles, end)
+    return TimingReport(cycles + cfg.config_overhead_cycles, busy, n)

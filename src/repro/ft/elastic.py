@@ -1,0 +1,125 @@
+"""Fault tolerance: straggler detection, heartbeat bookkeeping, elastic
+re-mesh policy.
+
+On a real fleet the runtime signals are host heartbeats and per-step
+barrier times; here the mechanisms are implemented host-side and unit
+tested with injected delays/failures:
+
+- ``StragglerMonitor``: robust per-step timing (median + k*MAD); flags
+  outlier steps/hosts and raises a mitigation decision (the paper's issue
+  analogue: a slow scalar core throttles all lanes — at fleet scale a slow
+  host throttles the whole mesh, so detection must be cheap and global).
+- ``ElasticPlan``: given surviving device count, pick the largest valid
+  mesh (lane axis preserved — it holds the param shards), compute the new
+  per-device batch, and drive checkpoint-based re-shard (checkpoint/ckpt
+  restores onto the new mesh's shardings).
+"""
+from __future__ import annotations
+
+import dataclasses
+import statistics
+import time
+from typing import Callable, Optional
+
+
+class StragglerMonitor:
+    def __init__(self, window: int = 50, k_mad: float = 5.0,
+                 min_steps: int = 10):
+        self.window = window
+        self.k_mad = k_mad
+        self.min_steps = min_steps
+        self.times: list[float] = []
+        self.flagged: list[tuple[int, float]] = []
+        self._t0: Optional[float] = None
+        self.step = 0
+
+    def start_step(self):
+        self._t0 = time.monotonic()
+
+    def end_step(self) -> bool:
+        """Record one step; True if this step is a straggler outlier."""
+        dt = time.monotonic() - self._t0
+        return self.observe(dt)
+
+    def observe(self, dt: float) -> bool:
+        self.step += 1
+        hist = self.times[-self.window:]
+        is_out = False
+        if len(hist) >= self.min_steps:
+            med = statistics.median(hist)
+            mad = statistics.median([abs(x - med) for x in hist]) or 1e-9
+            is_out = dt > med + self.k_mad * mad * 1.4826
+        self.times.append(dt)
+        if is_out:
+            self.flagged.append((self.step, dt))
+        return is_out
+
+    @property
+    def median(self) -> float:
+        return statistics.median(self.times) if self.times else 0.0
+
+
+@dataclasses.dataclass
+class Heartbeat:
+    host: int
+    last_seen: float
+
+
+class HeartbeatTracker:
+    """Detect dead hosts from missed heartbeats (poll-based)."""
+
+    def __init__(self, n_hosts: int, timeout_s: float = 60.0):
+        self.timeout = timeout_s
+        now = time.monotonic()
+        self.beats = {h: Heartbeat(h, now) for h in range(n_hosts)}
+
+    def beat(self, host: int, t: Optional[float] = None):
+        self.beats[host].last_seen = t if t is not None else time.monotonic()
+
+    def dead_hosts(self, now: Optional[float] = None) -> list[int]:
+        now = now if now is not None else time.monotonic()
+        return [h for h, b in self.beats.items()
+                if now - b.last_seen > self.timeout]
+
+
+@dataclasses.dataclass(frozen=True)
+class ElasticPlan:
+    data: int
+    model: int
+    n_devices: int
+    global_batch: int
+    note: str
+
+    @property
+    def mesh_shape(self):
+        return (self.data, self.model)
+
+
+def plan_remesh(n_surviving: int, model: int, old_global_batch: int,
+                min_data: int = 1) -> ElasticPlan:
+    """Largest (data, model) mesh from survivors; lane axis preserved.
+
+    Batch policy: keep per-data-shard batch constant (scales global batch
+    down with data axis) so activation memory per device is unchanged.
+    """
+    data = max(n_surviving // model, min_data)
+    if data * model > n_surviving:
+        raise ValueError(f"cannot build mesh: {n_surviving} devices "
+                         f"< model axis {model}")
+    # keep global batch divisible by the new data axis
+    per_shard = max(old_global_batch // data, 1)
+    new_batch = per_shard * data
+    return ElasticPlan(data, model, data * model, new_batch,
+                       note=f"remesh {data}x{model} from {n_surviving} "
+                            f"survivors; global_batch {new_batch}")
+
+
+def recover(ckpt_dir: str, target_shardings, build_state: Callable,
+            step_hint: Optional[int] = None):
+    """Restore-or-init onto the (possibly new) mesh."""
+    from repro.checkpoint import ckpt
+    step, state = ckpt.restore(ckpt_dir, step=step_hint,
+                               shardings=target_shardings)
+    if state is None:
+        return 0, build_state()
+    return step, state

@@ -1,0 +1,91 @@
+"""Flash-attention forward kernel (fused online-softmax, O(S) memory).
+
+The per-chip hot spot behind models/attention.chunked_attention: KV blocks
+stream through VMEM while running max/denominator carry in scratch — the
+same operand-queue streaming discipline as Ara's chained VFMA, applied to
+the softmax recurrence. Causal masking is block-level: fully-masked KV
+blocks are skipped by the index map (no wasted MXU work).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  scale: float, causal: bool, bq: int, bk: int, n_k: int):
+    kb = pl.program_id(2)
+
+    @pl.when(kb == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0]                       # (bq, d)
+    k = k_ref[0]                       # (bk, d)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    if causal:
+        qb = pl.program_id(1)
+        q_pos = qb * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        k_pos = kb * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        s = jnp.where(q_pos >= k_pos, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)
+    l_ref[...] = l_ref[...] * alpha + p.sum(axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha \
+        + jax.lax.dot_general(p.astype(v_ref.dtype), v_ref[0],
+                              (((1,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(kb == n_k - 1)
+    def _done():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)) \
+            .astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("causal", "bq", "bk", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, bq: int = 128,
+                    bk: int = 128, interpret: bool = False):
+    """q (B,H,Sq,D); k,v (B,H,Sk,D) -> (B,H,Sq,D)."""
+    b, h, sq, d = q.shape
+    sk = k.shape[2]
+    bq, bk = min(bq, sq), min(bk, sk)
+    assert sq % bq == 0 and sk % bk == 0
+    scale = 1.0 / math.sqrt(d)
+    qf = q.reshape(b * h, sq, d)
+    kf = k.reshape(b * h, sk, d)
+    vf = v.reshape(b * h, sk, d)
+    n_k = sk // bk
+    out = pl.pallas_call(
+        functools.partial(_flash_kernel, scale=scale, causal=causal,
+                          bq=bq, bk=bk, n_k=n_k),
+        grid=(b * h, sq // bq, n_k),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda g, qb, kb: (g, qb, 0)),
+            pl.BlockSpec((1, bk, d), lambda g, qb, kb: (g, kb, 0)),
+            pl.BlockSpec((1, bk, d), lambda g, qb, kb: (g, kb, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda g, qb, kb: (g, qb, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(b, h, sq, d)

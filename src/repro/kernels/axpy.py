@@ -1,0 +1,39 @@
+"""AXPY streaming kernel (the paper's DAXPY, memory-bound roofline witness).
+
+One VMEM-sized strip per grid step: the Pallas pipeline overlaps the next
+strip's HBM loads with the current strip's VPU FMA — Ara's chaining of VLD
+with VFMA (§V-B). Arithmetic intensity 1/12 (two loads + one store per FMA),
+firmly left of the roofline knee on any precision.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _axpy_kernel(alpha_ref, x_ref, y_ref, o_ref):
+    o_ref[...] = alpha_ref[0] * x_ref[...] + y_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def axpy(alpha, x, y, *, block: int = 64 * 1024, interpret: bool = False):
+    """alpha scalar; x, y (n,) -> alpha*x + y."""
+    n = x.shape[0]
+    block = min(block, n)
+    assert n % block == 0, (n, block)
+    alpha = jnp.asarray(alpha, x.dtype).reshape(1)
+    return pl.pallas_call(
+        _axpy_kernel,
+        grid=(n // block,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), x.dtype),
+        interpret=interpret,
+    )(alpha, x, y)

@@ -1,0 +1,54 @@
+"""Direct tensor convolution kernel (the paper's DCONV, GoogLeNet layer 1).
+
+Ara computes one 112-wide output row per vector register, accumulating
+C_in*KH*KW shifted FMAs (§V-C) — the vector-slide formulation of conv. The
+TPU version keeps that structure: one output row per grid step, the KW taps
+become VMEM row slices (free slides), the C_in*KH reduction a small VPU
+loop. The input image lives wholesale in VMEM (GoogLeNet L1 = 167 KB —
+well under the ~16 MB/core budget) because output rows overlap KH input
+rows, which block-index maps cannot express; weights are one (1,C,KH,KW)
+block per output channel. No im2col materialization — HBM traffic stays at
+the paper's "input loaded exactly once" accounting (I = 34.9 DP-FLOP/B).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _conv_kernel(x_ref, w_ref, o_ref, *, kh: int, kw: int, w_out: int):
+    # x_ref: (C, H, W) full image; w_ref: (1, C, KH, KW); o_ref: (1, 1, W_out)
+    r = pl.program_id(1)
+    c_in = x_ref.shape[0]
+    window = x_ref[:, pl.ds(r, kh), :]          # (C, KH, W)
+    acc = jnp.zeros((w_out,), jnp.float32)
+    for c in range(c_in):
+        for kr in range(kh):
+            row = window[c, kr, :]
+            for t in range(kw):
+                acc += w_ref[0, c, kr, t].astype(jnp.float32) \
+                    * row[t:t + w_out].astype(jnp.float32)
+    o_ref[0, 0, :] = acc.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def conv2d_direct(x, w, *, interpret: bool = False):
+    """x (C, H, W) [pre-padded]; w (OC, C, KH, KW) -> (OC, H_out, W_out)."""
+    c, h, wid = x.shape
+    oc, c2, kh, kw = w.shape
+    assert c == c2
+    h_out, w_out = h - kh + 1, wid - kw + 1
+    return pl.pallas_call(
+        functools.partial(_conv_kernel, kh=kh, kw=kw, w_out=w_out),
+        grid=(oc, h_out),
+        in_specs=[
+            pl.BlockSpec((c, h, wid), lambda o, r: (0, 0, 0)),
+            pl.BlockSpec((1, c, kh, kw), lambda o, r: (o, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, w_out), lambda o, r: (o, r, 0)),
+        out_shape=jax.ShapeDtypeStruct((oc, h_out, w_out), x.dtype),
+        interpret=interpret,
+    )(x, w)

@@ -1,0 +1,60 @@
+"""Blocked MXU matmul kernel (the paper's MATMUL, TPU-native).
+
+Ara streams one 64-bit element per lane per cycle into a chained FMA; the
+MXU analogue streams (bm x bk)x(bk x bn) tiles through the systolic array.
+The Pallas grid pipeline double-buffers A/B blocks HBM->VMEM, which is the
+operand-queue/chaining mechanism of §III-E3 restated for the TPU memory
+hierarchy. Multi-precision (§III-E4): bf16/f16 inputs at 2x MXU rate with
+fp32 accumulation — Ara's 2x32/4x16 subdivision of the 64-bit datapath.
+
+Block shapes default to MXU-aligned (128 multiples); K is the innermost
+(sequential) grid dim so the fp32 VMEM accumulator carries across K steps.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref, acc_ref, *, n_k: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(a_ref[...], b_ref[...],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(k == n_k - 1)
+    def _done():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def matmul(a, b, *, bm: int = 128, bn: int = 128, bk: int = 128,
+           interpret: bool = False):
+    """a (M,K) @ b (K,N) -> (M,N) in a's dtype, fp32 accumulation."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, (a.shape, b.shape)
+    bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (m, n, k, bm, bn, bk)
+    n_k = k // bk
+    grid = (m // bm, n // bn, n_k)
+    return pl.pallas_call(
+        functools.partial(_matmul_kernel, n_k=n_k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), a.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(a, b)

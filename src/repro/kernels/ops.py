@@ -1,0 +1,44 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+``interpret`` defaults to True off-TPU (this container is CPU-only; the
+kernel body then runs as the Pallas interpreter, validating semantics) and
+False on TPU where the compiled kernel is the fast path.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.attention import flash_attention as _flash
+from repro.kernels.axpy import axpy as _axpy
+from repro.kernels.conv import conv2d_direct as _conv
+from repro.kernels.matmul import matmul as _matmul
+from repro.kernels.ssm_scan import ssm_scan as _ssm
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def matmul(a, b, **kw):
+    kw.setdefault("interpret", _default_interpret())
+    return _matmul(a, b, **kw)
+
+
+def axpy(alpha, x, y, **kw):
+    kw.setdefault("interpret", _default_interpret())
+    return _axpy(alpha, x, y, **kw)
+
+
+def conv2d(x, w, **kw):
+    kw.setdefault("interpret", _default_interpret())
+    return _conv(x, w, **kw)
+
+
+def flash_attention(q, k, v, **kw):
+    kw.setdefault("interpret", _default_interpret())
+    return _flash(q, k, v, **kw)
+
+
+def ssm_scan(q, k, v, log_decay, scale, **kw):
+    kw.setdefault("interpret", _default_interpret())
+    return _ssm(q, k, v, log_decay, scale, **kw)

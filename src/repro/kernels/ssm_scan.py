@@ -1,0 +1,81 @@
+"""Chunked linear-attention / SSD scan kernel (Mamba2 & mLSTM hot spot).
+
+state_t = exp(dA_t) * state_{t-1} + scale_t * k_t v_t^T ;  y_t = q_t.state_t
+
+Chunkwise-parallel form: quadratic decay-masked attention inside a VMEM
+chunk, recurrence across chunks carried in fp32 VMEM scratch. The chunk
+(sequence) axis is the innermost TPU grid dim, so grid steps execute in
+order and the scratch state persists — the Pallas idiom for Ara's
+"functional unit streams micro-operations on consecutive cycles" (Fig. 2).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssm_kernel(q_ref, k_ref, v_ref, ld_ref, sc_ref, o_ref, state_ref, *,
+                chunk: int):
+    cb = pl.program_id(1)
+
+    @pl.when(cb == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    q = q_ref[0].astype(jnp.float32)          # (c, N)
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)          # (c, P)
+    ld = ld_ref[0].astype(jnp.float32)        # (c,)
+    sc = sc_ref[0].astype(jnp.float32)
+
+    cd = jnp.cumsum(ld)                       # (c,)
+    # cross-chunk contribution
+    y_off = jnp.exp(cd)[:, None] * jax.lax.dot_general(
+        q, state_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    # within-chunk decay-masked attention
+    scores = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+    ldiff = cd[:, None] - cd[None, :]
+    tri = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0) \
+        >= jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    w = jnp.where(tri, scores * jnp.exp(ldiff), 0.0) * sc[None, :]
+    y_diag = jax.lax.dot_general(w, v, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+    o_ref[0] = (y_off + y_diag).astype(o_ref.dtype)
+    # state update
+    cd_last = cd[-1]
+    k_dec = k * (sc * jnp.exp(cd_last - cd))[:, None]
+    state_ref[...] = state_ref[...] * jnp.exp(cd_last) \
+        + jax.lax.dot_general(k_dec, v, (((0,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssm_scan(q, k, v, log_decay, scale, *, chunk: int = 128,
+             interpret: bool = False):
+    """q,k (BH, S, N); v (BH, S, P); log_decay, scale (BH, S) ->
+    y (BH, S, P). fp32 state; matches models/ssm.chunked_linear_attention."""
+    bh, s, n = q.shape
+    p_dim = v.shape[-1]
+    chunk = min(chunk, s)
+    assert s % chunk == 0, (s, chunk)
+    return pl.pallas_call(
+        functools.partial(_ssm_kernel, chunk=chunk),
+        grid=(bh, s // chunk),
+        in_specs=[
+            pl.BlockSpec((1, chunk, n), lambda g, c: (g, c, 0)),
+            pl.BlockSpec((1, chunk, n), lambda g, c: (g, c, 0)),
+            pl.BlockSpec((1, chunk, p_dim), lambda g, c: (g, c, 0)),
+            pl.BlockSpec((1, chunk), lambda g, c: (g, c)),
+            pl.BlockSpec((1, chunk), lambda g, c: (g, c)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, p_dim), lambda g, c: (g, c, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, s, p_dim), v.dtype),
+        scratch_shapes=[pltpu.VMEM((n, p_dim), jnp.float32)],
+        interpret=interpret,
+    )(q, k, v, log_decay, scale)

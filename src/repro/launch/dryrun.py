@@ -1,0 +1,195 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: AOT lower+compile of every (arch x shape x mesh) cell.
+
+Proves the distribution config is coherent with no real hardware: 512
+placeholder host devices stand in for 2 pods x 256 chips. Writes one JSON
+per cell (memory analysis, trip-count-adjusted FLOPs/bytes, collective
+schedule, roofline terms) consumed by EXPERIMENTS.md and the perf loop.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch llama3-8b \
+      --shape train_4k [--multi-pod] [--out experiments/dryrun]
+  PYTHONPATH=src python -m repro.launch.dryrun --all
+"""
+import argparse
+import dataclasses
+import json
+import sys
+import time
+import traceback
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
+             overrides: dict | None = None, tag: str = "") -> dict:
+    import jax
+    from repro.configs import SHAPES, get_config
+    from repro.core import roofline
+    from repro.launch.mesh import make_production_mesh
+    from repro.models import transformer as tf
+    from repro.models.sharding import MeshCtx
+    from repro.optim import adamw
+    from repro.train import step as step_lib
+
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    if shape.kind == "prefill" and cfg.fsdp:
+        # prefill sharding profile (§Perf): weight gathers amortize over
+        # the prompt tokens, so stationary TP/EP weights win. Decode keeps
+        # the config sharding — replicating 671B params per data group
+        # regressed decode 11x (§Perf); a real server shares one sharding
+        # for both, chosen by the decode-dominant regime.
+        cfg = dataclasses.replace(cfg, fsdp=False)
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    if not cfg.supports_shape(shape):
+        return {"arch": arch, "shape": shape_name, "skipped": True,
+                "reason": "long_500k requires sub-quadratic token mixing"}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    n_dev = mesh.devices.size
+    batch_axes = ("pod", "data") if multi_pod else ("data",)
+    ctx = MeshCtx(mesh=mesh, batch_axes=batch_axes)
+
+    t0 = time.time()
+    specs_in = tf.input_specs(cfg, shape)
+
+    from repro.models.layers import abstract_params
+    import jax.numpy as jnp
+
+    if shape.kind == "train":
+        opt_cfg = adamw.OptConfig(moment_dtype=cfg.opt_state_dtype)
+        bundle = step_lib.make_train_step(cfg, opt_cfg, ctx)
+        state_sh = step_lib.named_for(bundle.state_specs,
+                                      bundle.abstract_state, mesh)
+        batch_sh = step_lib.named_for(bundle.batch_specs, specs_in, mesh)
+        with mesh:
+            lowered = jax.jit(
+                bundle.step_fn,
+                in_shardings=(state_sh, batch_sh),
+                out_shardings=(state_sh, None),
+            ).lower(bundle.abstract_state, specs_in)
+    elif shape.kind == "prefill":
+        prefill = step_lib.make_prefill_step(cfg, ctx, shape.seq_len)
+        aparams = abstract_params(tf.model_template(cfg),
+                                  jnp.dtype(cfg.param_dtype))
+        acache = tf.init_cache(cfg, shape.global_batch, shape.seq_len,
+                               abstract=True)
+        pspecs = step_lib.named_for(
+            step_lib.train_state_specs(cfg, ctx)["params"], aparams, mesh)
+        bspecs = step_lib.named_for(
+            step_lib.batch_pspecs(cfg, shape.kind, ctx), specs_in, mesh)
+        cspecs = step_lib.named_for(step_lib.cache_pspecs(cfg, ctx),
+                                    acache, mesh)
+        with mesh:
+            lowered = jax.jit(
+                prefill,
+                in_shardings=(pspecs, bspecs),
+                out_shardings=(None, cspecs),
+            ).lower(aparams, specs_in)
+    else:  # decode / long_decode
+        decode = step_lib.make_decode_step(cfg, ctx)
+        aparams = abstract_params(tf.model_template(cfg),
+                                  jnp.dtype(cfg.param_dtype))
+        acache = specs_in["cache"]
+        batch = {k: v for k, v in specs_in.items() if k != "cache"}
+        pspecs = step_lib.named_for(
+            step_lib.train_state_specs(cfg, ctx)["params"], aparams, mesh)
+        cspecs = step_lib.named_for(step_lib.cache_pspecs(cfg, ctx),
+                                    acache, mesh)
+        bspecs = step_lib.named_for(
+            step_lib.batch_pspecs(cfg, shape.kind, ctx), batch, mesh)
+        with mesh:
+            lowered = jax.jit(
+                decode,
+                in_shardings=(pspecs, cspecs, bspecs),
+                out_shardings=(None, cspecs),
+            ).lower(aparams, acache, batch)
+
+    t_lower = time.time() - t0
+    compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    mem_d = {}
+    if mem is not None:
+        for f in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "alias_size_in_bytes",
+                  "generated_code_size_in_bytes"):
+            mem_d[f] = getattr(mem, f, None)
+    cost = dict(compiled.cost_analysis() or {})
+    hlo = compiled.as_text()
+    rl = roofline.build(cfg, shape, mesh_name, n_dev, hlo,
+                        cost={k: cost.get(k) for k in
+                              ("flops", "bytes accessed")})
+
+    per_dev_bytes = (mem_d.get("argument_size_in_bytes") or 0) \
+        - (mem_d.get("alias_size_in_bytes") or 0) \
+        + (mem_d.get("temp_size_in_bytes") or 0) \
+        + (mem_d.get("output_size_in_bytes") or 0)
+    result = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name, "tag": tag,
+        "n_devices": n_dev, "kind": shape.kind,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "memory_analysis": mem_d,
+        "per_device_state_bytes": mem_d.get("argument_size_in_bytes"),
+        "per_device_peak_bytes_est": per_dev_bytes,
+        "fits_v5e_16g": (per_dev_bytes or 0) < 16e9,
+        "roofline": rl.row(),
+        "params_total": cfg.param_count(),
+        "params_active": cfg.active_param_count(),
+    }
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        suffix = f"_{tag}" if tag else ""
+        path = os.path.join(out_dir, f"{arch}_{shape_name}_{mesh_name}{suffix}.json")
+        with open(path, "w") as f:
+            json.dump(result, f, indent=1, default=str)
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    from repro.configs import cells
+    todo = []
+    if args.all:
+        for arch, shape in cells():
+            todo.append((arch, shape, False))
+            todo.append((arch, shape, True))
+    else:
+        todo.append((args.arch, args.shape, args.multi_pod))
+
+    failures = 0
+    for arch, shape, mp in todo:
+        mesh_name = "pod2x16x16" if mp else "pod16x16"
+        path = os.path.join(args.out, f"{arch}_{shape}_{mesh_name}.json")
+        if args.skip_existing and os.path.exists(path):
+            print(f"SKIP {arch} {shape} {mesh_name} (exists)", flush=True)
+            continue
+        try:
+            r = run_cell(arch, shape, mp, args.out)
+            rl = r.get("roofline", {})
+            print(f"OK   {arch:22s} {shape:12s} {mesh_name:10s} "
+                  f"compile={r.get('compile_s')}s "
+                  f"bottleneck={rl.get('bottleneck')} "
+                  f"step={rl.get('achievable_step_s', 0):.4g}s "
+                  f"mfu_bound={rl.get('mfu_bound', 0):.3f}", flush=True)
+        except Exception:
+            failures += 1
+            print(f"FAIL {arch} {shape} {mesh_name}", flush=True)
+            traceback.print_exc()
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

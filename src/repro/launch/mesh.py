@@ -1,0 +1,48 @@
+"""Production mesh construction (assignment-mandated shapes) + elastic remesh.
+
+``make_production_mesh`` is a FUNCTION so importing this module never touches
+jax device state (device count is locked at first jax init — see dryrun.py,
+which sets XLA_FLAGS before any import).
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    import jax
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(data: int, model: int, pod: int = 1,
+              devices: Optional[Sequence] = None):
+    """Explicit mesh for tests/examples; devices defaults to all."""
+    import jax
+    devs = list(devices if devices is not None else jax.devices())
+    n = pod * data * model
+    assert len(devs) >= n, (len(devs), n)
+    arr = np.array(devs[:n])
+    if pod > 1:
+        return jax.sharding.Mesh(arr.reshape(pod, data, model),
+                                 ("pod", "data", "model"))
+    return jax.sharding.Mesh(arr.reshape(data, model), ("data", "model"))
+
+
+def elastic_mesh(n_available: int, model: int = 16, devices=None):
+    """Largest (data, model) mesh buildable from surviving devices.
+
+    Keeps the lane (model) axis fixed — lanes hold param shards and must stay
+    intact — and shrinks the data axis, mirroring how Ara keeps lanes and
+    varies the problem strip. Returns (mesh, data_size).
+    """
+    import jax
+    devs = list(devices if devices is not None else jax.devices())[:n_available]
+    data = max(len(devs) // model, 1)
+    if data * model > len(devs):
+        model = len(devs)
+        data = 1
+    return make_mesh(data, model, devices=devs[:data * model]), data

@@ -1,0 +1,28 @@
+"""Dense FFN blocks (gated-SiLU / GELU), Megatron column->row sharded."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import P, activation_fn
+
+
+def mlp_template(d_model: int, d_ff: int, activation: str) -> dict:
+    t = {
+        "w_up": P((d_model, d_ff), ("embed", "ffn"), "fan_in"),
+        "w_down": P((d_ff, d_model), ("ffn", "embed2"), "fan_in"),
+    }
+    if activation == "silu":
+        t["w_gate"] = P((d_model, d_ff), ("embed", "ffn"), "fan_in")
+    return t
+
+
+def mlp(p: dict, x, activation: str):
+    act = activation_fn(activation)
+    up = jnp.einsum("bsd,df->bsf", x, p["w_up"].astype(x.dtype))
+    if "w_gate" in p:
+        gate = jnp.einsum("bsd,df->bsf", x, p["w_gate"].astype(x.dtype))
+        h = act(gate) * up
+    else:
+        h = act(up)
+    return jnp.einsum("bsf,fd->bsd", h, p["w_down"].astype(x.dtype))

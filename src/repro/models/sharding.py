@@ -1,0 +1,95 @@
+"""Logical-axis -> mesh-axis policy (the lane-assignment rules).
+
+DESIGN.md §2: the ``model`` axis is Ara's lane axis. Rules keep chained ops
+lane-local (Megatron column->row pairing = barber's-pole banking), shard
+experts over lanes when they divide (EP), and optionally FSDP-shard the
+non-lane dim of params over ``data`` for models too big to replicate.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import Rules
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshCtx:
+    """Runtime mesh context threaded through forwards (None = single device)."""
+    mesh: Optional[Mesh]
+    batch_axes: tuple = ("data",)
+    model_axis: str = "model"
+
+    @property
+    def axis_sizes(self) -> dict:
+        if self.mesh is None:
+            return {}
+        return dict(zip(self.mesh.axis_names, self.mesh.devices.shape))
+
+    @property
+    def n_lanes(self) -> int:
+        return self.axis_sizes.get(self.model_axis, 1)
+
+
+def make_rules(cfg: ArchConfig, ctx: MeshCtx) -> Rules:
+    model = ctx.model_axis
+    # ZeRO-3/FSDP: shard the non-lane param dim over every batch axis
+    # (pod included on multi-pod: 671B params cannot pod-replicate)
+    fsdp_axis = tuple(a for a in ctx.batch_axes if a in ctx.axis_sizes) \
+        if cfg.fsdp else None
+    fsdp_axis = fsdp_axis or None
+    mapping = (
+        ("vocab", model),
+        ("heads", model),
+        ("kv_heads", model),
+        ("head_dim", None),
+        ("ffn", model),
+        ("embed", fsdp_axis),
+        ("embed2", fsdp_axis),      # second d_model dim (e.g. wo out)
+        ("q_lora", fsdp_axis),
+        ("kv_lora", fsdp_axis),
+        ("experts", model if cfg.moe.expert_parallel else None),
+        ("experts_ffn", model if not cfg.moe.expert_parallel else None),
+        ("d_inner", model),         # ssm inner dim
+        ("ssm_state", None),
+        ("layers", None),
+        ("batch", tuple(ctx.batch_axes)),
+        ("seq", None),
+        ("kv_seq", None),           # set to model for seq-sharded KV caches
+    )
+    mesh_shape = tuple(ctx.axis_sizes.items())
+    return Rules(mapping=mapping, mesh_shape=mesh_shape)
+
+
+def kv_cache_rules(cfg: ArchConfig, ctx: MeshCtx) -> Rules:
+    """Decode caches: shard KV heads over lanes when they divide, else shard
+    the sequence dim (sequence-parallel cache; GSPMD inserts the partial
+    softmax collectives)."""
+    model = ctx.model_axis
+    lanes = ctx.n_lanes
+    heads_shardable = cfg.n_kv_heads % max(lanes, 1) == 0 and not cfg.use_mla
+    mapping = (
+        ("batch", tuple(ctx.batch_axes)),
+        ("kv_heads", model if heads_shardable else None),
+        ("kv_seq", None if heads_shardable else model),
+        ("head_dim", None),
+        ("kv_lora", None),
+        ("layers", None),
+        ("groups", None),
+        ("d_inner", model),
+        ("ssm_state", None),
+        ("heads", model),
+        ("embed", None),
+        ("seq", None),
+    )
+    return Rules(mapping=mapping, mesh_shape=tuple(ctx.axis_sizes.items()))
+
+
+def named_sharding_tree(spec_tree, mesh: Mesh):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, PartitionSpec))

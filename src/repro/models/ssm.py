@@ -1,0 +1,294 @@
+"""State-space / linear-recurrent blocks: Mamba2 (SSD) and mLSTM (xLSTM).
+
+Both reduce to one chunked linear-attention core:
+    state_t = exp(log_decay_t) * state_{t-1} + scale_t * k_t v_t^T
+    y_t     = q_t . state_t          (+ skip terms)
+computed in the standard chunkwise-parallel form: quadratic attention inside
+a chunk (with decay mask), lax.scan recurrence across chunks. This is also
+the oracle semantics of the Pallas kernel in repro/kernels/ssm_scan.py.
+
+Deviations (DESIGN.md §9): xLSTM's exp input gate + m-stabilizer is replaced
+by sigmoid gating with fp32 accumulation + a ones-augmented value column as
+normalizer — same state-space form, unconditionally stable in bf16.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import P, rms_norm
+
+SSD_CHUNK = 64
+
+
+# ---------------------------------------------------------------------------
+# Chunked linear-attention core
+# ---------------------------------------------------------------------------
+
+
+def chunked_linear_attention(q, k, v, log_decay, scale,
+                             initial_state: Optional[jax.Array] = None,
+                             chunk: int = SSD_CHUNK):
+    """q,k (B,S,H,N); v (B,S,H,P); log_decay,scale (B,S,H).
+
+    Returns y (B,S,H,P) and final state (B,H,N,P). fp32 state/accum.
+    """
+    b, s, h, n = q.shape
+    p_dim = v.shape[-1]
+    c = min(chunk, s)
+    n_chunks = -(-s // c)
+    pad = n_chunks * c - s
+    if pad:
+        zpad = lambda x: jnp.pad(x, ((0, 0), (0, pad)) + ((0, 0),) * (x.ndim - 2))
+        q, k, v = zpad(q), zpad(k), zpad(v)
+        log_decay = jnp.pad(log_decay, ((0, 0), (0, pad), (0, 0)))
+        scale = jnp.pad(scale, ((0, 0), (0, pad), (0, 0)))
+
+    qc = q.reshape(b, n_chunks, c, h, n).transpose(1, 0, 2, 3, 4)
+    kc = k.reshape(b, n_chunks, c, h, n).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, n_chunks, c, h, p_dim).transpose(1, 0, 2, 3, 4)
+    dc = log_decay.reshape(b, n_chunks, c, h).transpose(1, 0, 2, 3)
+    sc = scale.reshape(b, n_chunks, c, h).transpose(1, 0, 2, 3)
+
+    tri = jnp.tril(jnp.ones((c, c), bool))  # causal (incl. diagonal)
+
+    if initial_state is None:
+        initial_state = jnp.zeros((b, h, n, p_dim), jnp.float32)
+
+    def body(state, xs):
+        qb, kb, vb, db, sb = xs            # (B,c,H,·)
+        cd = jnp.cumsum(db.astype(jnp.float32), axis=1)      # (B,c,H)
+        # cross-chunk: y_off[t] = q_t . (exp(cd_t) * state)
+        q_dec = qb.astype(jnp.float32) * jnp.exp(cd)[..., None]
+        y_off = jnp.einsum("bqhn,bhnp->bqhp", q_dec, state)
+        # within-chunk: L[t,s] = exp(cd_t - cd_s) for s <= t
+        scores = jnp.einsum("bqhn,bshn->bqsh", qb, kb,
+                            preferred_element_type=jnp.float32)
+        ldiff = cd[:, :, None, :] - cd[:, None, :, :]         # (B,q,s,H)
+        decay = jnp.where(tri[None, :, :, None], jnp.exp(ldiff), 0.0)
+        w = scores * decay * sb[:, None, :, :]
+        y_diag = jnp.einsum("bqsh,bshp->bqhp", w, vb.astype(jnp.float32))
+        # state update: decay to end-of-chunk, add chunk contributions
+        cd_last = cd[:, -1:, :]                               # (B,1,H)
+        k_dec = kb.astype(jnp.float32) * (sb * jnp.exp(cd_last - cd))[..., None]
+        state = state * jnp.exp(cd_last[:, 0, :])[:, :, None, None] \
+            + jnp.einsum("bshn,bshp->bhnp", k_dec, vb.astype(jnp.float32))
+        return state, (y_off + y_diag).astype(v.dtype)
+
+    state, yc = jax.lax.scan(body, initial_state, (qc, kc, vc, dc, sc))
+    y = yc.transpose(1, 0, 2, 3, 4).reshape(b, n_chunks * c, h, p_dim)
+    return y[:, :s], state
+
+
+def linear_attention_step(q, k, v, log_decay, scale, state):
+    """Single-token recurrence. q,k (B,H,N); v (B,H,P); decay/scale (B,H);
+    state (B,H,N,P) fp32. Returns y (B,H,P), new state."""
+    state = state * jnp.exp(log_decay.astype(jnp.float32))[..., None, None] \
+        + scale.astype(jnp.float32)[..., None, None] \
+        * (k.astype(jnp.float32)[..., :, None] * v.astype(jnp.float32)[..., None, :])
+    y = jnp.einsum("bhn,bhnp->bhp", q.astype(jnp.float32), state)
+    return y.astype(v.dtype), state
+
+
+# ---------------------------------------------------------------------------
+# Depthwise causal conv (shared)
+# ---------------------------------------------------------------------------
+
+
+def causal_conv1d(x, w, b, conv_state=None):
+    """x (B,S,C); w (W,C) depthwise; returns (y, new_state (B,W-1,C))."""
+    width = w.shape[0]
+    if conv_state is None:
+        conv_state = jnp.zeros((x.shape[0], width - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([conv_state.astype(x.dtype), x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1], :] * w[i].astype(x.dtype)
+            for i in range(width))
+    new_state = xp[:, -(width - 1):, :] if width > 1 else conv_state
+    return y + b.astype(x.dtype), new_state
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 block
+# ---------------------------------------------------------------------------
+
+
+def mamba2_template(cfg: ArchConfig) -> dict:
+    s = cfg.ssm
+    d = cfg.d_model
+    di = s.expansion * d
+    nh = di // s.head_dim
+    n = s.state_dim
+    conv_dim = di + 2 * n
+    return {
+        "in_proj": P((d, 2 * di + 2 * n + nh), ("embed", "d_inner"), "fan_in"),
+        "conv_w": P((s.conv_width, conv_dim), (None, "d_inner"), "fan_in"),
+        "conv_b": P((conv_dim,), ("d_inner",), "zeros"),
+        "a_log": P((nh,), (None,), "zeros"),
+        "d_skip": P((nh,), (None,), "ones"),
+        "dt_bias": P((nh,), (None,), "zeros"),
+        "norm": P((di,), ("d_inner",), "ones"),
+        "out_proj": P((di, d), ("d_inner", "embed2"), "fan_in"),
+    }
+
+
+def _mamba2_split(cfg, p, x):
+    s = cfg.ssm
+    d = cfg.d_model
+    di = s.expansion * d
+    n = s.state_dim
+    nh = di // s.head_dim
+    zxbcdt = jnp.einsum("bsd,dk->bsk", x, p["in_proj"].astype(x.dtype))
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di:di + di + 2 * n]
+    dt_pre = zxbcdt[..., -nh:]
+    return z, xbc, dt_pre, di, n, nh
+
+
+def mamba2_block(cfg: ArchConfig, p: dict, x, state: Optional[dict] = None):
+    """x (B,S,d). state = {"conv": (B,W-1,conv_dim), "ssm": (B,H,N,P)} or None.
+    Returns (y, new_state or None)."""
+    s = cfg.ssm
+    b, seq, _ = x.shape
+    z, xbc, dt_pre, di, n, nh = _mamba2_split(cfg, p, x)
+    hd = s.head_dim
+
+    conv_state = state["conv"] if state is not None else None
+    xbc, new_conv = causal_conv1d(xbc, p["conv_w"], p["conv_b"], conv_state)
+    xbc = jax.nn.silu(xbc)
+    xs = xbc[..., :di].reshape(b, seq, nh, hd)
+    bmat = xbc[..., di:di + n]
+    cmat = xbc[..., di + n:]
+
+    dt = jax.nn.softplus(dt_pre.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    log_decay = dt * a                                # (B,S,H)
+
+    kq_shape = (b, seq, nh, n)
+    k = jnp.broadcast_to(bmat[:, :, None, :], kq_shape)
+    q = jnp.broadcast_to(cmat[:, :, None, :], kq_shape)
+
+    if state is None:
+        y, _ = chunked_linear_attention(q, k, xs, log_decay, dt,
+                                        chunk=s.chunk_size)
+        new_state = None
+    elif seq == 1:
+        yv, new_ssm = linear_attention_step(
+            q[:, 0], k[:, 0], xs[:, 0], log_decay[:, 0], dt[:, 0],
+            state["ssm"])
+        y = yv[:, None]
+        new_state = {"conv": new_conv, "ssm": new_ssm}
+    else:
+        y, new_ssm = chunked_linear_attention(q, k, xs, log_decay, dt,
+                                              initial_state=state["ssm"],
+                                              chunk=s.chunk_size)
+        new_state = {"conv": new_conv, "ssm": new_ssm}
+
+    y = y + xs * p["d_skip"].astype(x.dtype)[None, None, :, None]
+    y = y.reshape(b, seq, di)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    return jnp.einsum("bsk,kd->bsd", y, p["out_proj"].astype(x.dtype)), new_state
+
+
+def mamba2_init_state(cfg: ArchConfig, batch: int, dtype=jnp.float32) -> dict:
+    s = cfg.ssm
+    di = s.expansion * cfg.d_model
+    nh = di // s.head_dim
+    return {
+        "conv": jnp.zeros((batch, s.conv_width - 1, di + 2 * s.state_dim), dtype),
+        "ssm": jnp.zeros((batch, nh, s.state_dim, s.head_dim), jnp.float32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# mLSTM block (xLSTM)
+# ---------------------------------------------------------------------------
+
+
+def mlstm_template(cfg: ArchConfig) -> dict:
+    s = cfg.ssm
+    d = cfg.d_model
+    di = s.expansion * d
+    dqk = int(di * s.qk_dim_factor)
+    nh = cfg.n_heads
+    return {
+        "up_proj": P((d, 2 * di), ("embed", "d_inner"), "fan_in"),
+        "conv_w": P((s.conv_width, di), (None, "d_inner"), "fan_in"),
+        "conv_b": P((di,), ("d_inner",), "zeros"),
+        "wq": P((di, dqk), ("d_inner", None), "fan_in"),
+        "wk": P((di, dqk), ("d_inner", None), "fan_in"),
+        "wv": P((di, di), ("d_inner", None), "fan_in"),
+        "w_igate": P((di, nh), ("d_inner", None), "fan_in"),
+        "b_igate": P((nh,), (None,), "zeros"),
+        "w_fgate": P((di, nh), ("d_inner", None), "fan_in"),
+        "b_fgate": P((nh,), (None,), "ones"),
+        "norm": P((di,), ("d_inner",), "ones"),
+        "out_proj": P((di, d), ("d_inner", "embed2"), "fan_in"),
+    }
+
+
+def mlstm_block(cfg: ArchConfig, p: dict, x, state: Optional[dict] = None):
+    """x (B,S,d). state = {"conv", "ssm" (B,H,Nqk,Pv+1)} or None."""
+    s = cfg.ssm
+    b, seq, d = x.shape
+    di = s.expansion * d
+    nh = cfg.n_heads
+    up = jnp.einsum("bsd,dk->bsk", x, p["up_proj"].astype(x.dtype))
+    x_in, z = up[..., :di], up[..., di:]
+
+    conv_state = state["conv"] if state is not None else None
+    x_c, new_conv = causal_conv1d(x_in, p["conv_w"], p["conv_b"], conv_state)
+    x_c = jax.nn.silu(x_c)
+
+    dqk = p["wq"].shape[1]
+    hqk, hv = dqk // nh, di // nh
+    q = jnp.einsum("bsk,kn->bsn", x_c, p["wq"].astype(x.dtype)).reshape(b, seq, nh, hqk)
+    k = jnp.einsum("bsk,kn->bsn", x_c, p["wk"].astype(x.dtype)).reshape(b, seq, nh, hqk)
+    v = jnp.einsum("bsk,kn->bsn", x_in, p["wv"].astype(x.dtype)).reshape(b, seq, nh, hv)
+    q = q / jnp.sqrt(jnp.float32(hqk)).astype(x.dtype)
+
+    ig = jnp.einsum("bsk,kh->bsh", x_in, p["w_igate"].astype(x.dtype)) \
+        + p["b_igate"].astype(x.dtype)
+    fg = jnp.einsum("bsk,kh->bsh", x_in, p["w_fgate"].astype(x.dtype)) \
+        + p["b_fgate"].astype(x.dtype)
+    log_f = jax.nn.log_sigmoid(fg.astype(jnp.float32))
+    i_gate = jax.nn.sigmoid(ig.astype(jnp.float32))
+
+    v_aug = jnp.concatenate([v, jnp.ones(v.shape[:-1] + (1,), v.dtype)], -1)
+
+    if state is None:
+        y_aug, _ = chunked_linear_attention(q, k, v_aug, log_f, i_gate,
+                                            chunk=s.chunk_size)
+        new_state = None
+    elif seq == 1:
+        ya, new_ssm = linear_attention_step(
+            q[:, 0], k[:, 0], v_aug[:, 0], log_f[:, 0], i_gate[:, 0],
+            state["ssm"])
+        y_aug = ya[:, None]
+        new_state = {"conv": new_conv, "ssm": new_ssm}
+    else:
+        y_aug, new_ssm = chunked_linear_attention(q, k, v_aug, log_f, i_gate,
+                                                  initial_state=state["ssm"],
+                                                  chunk=s.chunk_size)
+        new_state = {"conv": new_conv, "ssm": new_ssm}
+
+    num = y_aug[..., :hv].astype(jnp.float32)
+    den = y_aug[..., hv:].astype(jnp.float32)
+    y = (num / jnp.maximum(jnp.abs(den), 1e-6)).astype(x.dtype)
+    y = y.reshape(b, seq, di)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    return jnp.einsum("bsk,kd->bsd", y, p["out_proj"].astype(x.dtype)), new_state
+
+
+def mlstm_init_state(cfg: ArchConfig, batch: int, dtype=jnp.float32) -> dict:
+    s = cfg.ssm
+    di = s.expansion * cfg.d_model
+    dqk = int(di * s.qk_dim_factor)
+    nh = cfg.n_heads
+    return {
+        "conv": jnp.zeros((batch, s.conv_width - 1, di), dtype),
+        "ssm": jnp.zeros((batch, nh, dqk // nh, di // nh + 1), jnp.float32),
+    }

@@ -1,0 +1,79 @@
+"""int8 error-feedback gradient compression for the DP all-reduce.
+
+Beyond-paper distributed-optimization lever (DESIGN.md §5). The classic
+two-phase compressed all-reduce, all int8 on the wire:
+
+  1. shared scale  s  = pmax(|g + residual|) / 127     (scalar psum — free)
+  2. quantize      q  = round((g + residual)/s) : int8 ; residual update
+  3. reduce-scatter: all_to_all the int8 shards, accumulate int32 locally
+  4. re-quantize the local partial sum (per-device scale s2)
+  5. all-gather    int8 chunks + f32 scales; dequantize, divide by n
+
+Wire bytes = 2x int8 passes ~= g.nbytes/2 vs 2x f32 for ring all-reduce —
+a 4x reduction of the collective-roofline term on the gradient reduction
+(EXPERIMENTS.md §Perf measures it from the HLO). Error feedback carries the
+step-2 quantization residual into the next step, keeping the scheme
+unbiased over time.
+
+Call ``compressed_psum`` inside shard_map with grads sharded on ``axis``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _compressed_allreduce_mean(g, axis: str, n: int):
+    """g: identical-shape local fp32 tensor per device. Returns mean over
+    the axis, computed via int8 all_to_all + int8 all_gather."""
+    flat = g.reshape(-1)
+    pad = (-flat.shape[0]) % n
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    k = flat.shape[0] // n
+
+    # phase 1: shared scale, int8 quantize
+    s = jax.lax.pmax(jnp.max(jnp.abs(flat)), axis) / 127.0
+    s = jnp.maximum(s, 1e-12)
+    q = jnp.clip(jnp.round(flat / s), -127, 127).astype(jnp.int8)
+    residual = flat - q.astype(jnp.float32) * s
+
+    # phase 2: reduce-scatter via int8 all_to_all, int32 local accumulation
+    shards = q.reshape(n, k)
+    recv = jax.lax.all_to_all(shards, axis, 0, 0, tiled=False)  # (n, k) int8
+    partial = jnp.sum(recv.astype(jnp.int32), axis=0)           # (k,) int32
+    partial_f = partial.astype(jnp.float32) * s
+
+    # phase 3: re-quantize the partial sum, all-gather int8 + scales
+    s2 = jnp.maximum(jnp.max(jnp.abs(partial_f)) / 127.0, 1e-12)
+    q2 = jnp.clip(jnp.round(partial_f / s2), -127, 127).astype(jnp.int8)
+    gq = jax.lax.all_gather(q2, axis)                           # (n, k) int8
+    gs = jax.lax.all_gather(s2, axis)                           # (n,) f32
+    full = (gq.astype(jnp.float32) * gs[:, None]).reshape(-1)
+    orig = flat.shape[0] - pad
+    out = full[:orig] if pad else full
+    res = residual[:orig] if pad else residual
+    return (out / n).reshape(g.shape), res.reshape(g.shape)
+
+
+def compressed_psum(grads, residuals, mesh, axes):
+    """grads/residuals: pytrees of local fp32 grads (replicated layout over
+    ``axes``). Returns (mean_grads, new_residuals). Use inside shard_map."""
+    axis = axes[0] if len(axes) == 1 else axes
+    if isinstance(axis, (tuple, list)):
+        raise NotImplementedError("compress over one axis; fold axes first")
+    n = mesh.shape[axis]
+
+    def one(g, r):
+        return _compressed_allreduce_mean(g + r, axis, n)
+
+    flat_g, td = jax.tree_util.tree_flatten(grads)
+    flat_r = td.flatten_up_to(residuals)
+    outs = [one(g, r) for g, r in zip(flat_g, flat_r)]
+    return (jax.tree_util.tree_unflatten(td, [o[0] for o in outs]),
+            jax.tree_util.tree_unflatten(td, [o[1] for o in outs]))
+
+
+def init_residuals(params):
+    return jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)

@@ -1,0 +1,150 @@
+"""Batched serving engine: continuous batching over a fixed-size slot pool.
+
+Prefill fills a slot's KV rows at its own offset (per-sequence ``lengths``
+make slots independent); decode advances every active slot one token per
+step. Slot admission/eviction is host-side; device steps are two jitted
+functions (prefill_step, decode_step) reused across requests — the serving
+analogue of the paper's decoupled dispatch queue (§III-A: Ara keeps eight
+instructions in flight; the engine keeps ``slots`` sequences in flight).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import transformer as tf
+from repro.models.sharding import MeshCtx
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray               # (S,) int32
+    max_new_tokens: int = 16
+    temperature: float = 0.0         # 0 -> greedy
+    eos_id: int = -1                 # -1 -> never stops early
+    out_tokens: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServingEngine:
+    def __init__(self, cfg: ArchConfig, params, *, slots: int = 4,
+                 max_seq: int = 512, ctx: Optional[MeshCtx] = None,
+                 greedy: bool = True):
+        self.cfg = cfg
+        self.params = params
+        self.slots = slots
+        self.max_seq = max_seq
+        self.ctx = ctx or MeshCtx(mesh=None)
+        self.greedy = greedy
+        self.cache = tf.init_cache(cfg, slots, max_seq,
+                                   cache_dtype=jnp.float32)
+        self.active: dict[int, Request] = {}     # slot -> request
+        self.queue: list[Request] = []
+        self._key = jax.random.PRNGKey(0)
+        self._decode = jax.jit(self._decode_impl)
+        self._prefill_one = jax.jit(self._prefill_impl,
+                                    static_argnames=("plen",))
+
+    # -- device fns ---------------------------------------------------------
+
+    def _decode_impl(self, params, cache, tokens, active_mask, temps, key):
+        logits, _, new_cache = tf.forward(self.cfg, params, tokens,
+                                          ctx=self.ctx, cache=cache)
+        last = logits[:, -1].astype(jnp.float32)
+        greedy = jnp.argmax(last, axis=-1).astype(jnp.int32)
+        scaled = last / jnp.maximum(temps, 1e-6)[:, None]
+        keys = jax.random.split(key, last.shape[0])
+        sampled = jax.vmap(jax.random.categorical)(keys, scaled) \
+            .astype(jnp.int32)
+        next_tok = jnp.where(temps > 0, sampled, greedy)
+        # inactive slots must not advance their lengths
+        new_cache["lengths"] = jnp.where(active_mask, new_cache["lengths"],
+                                         cache["lengths"])
+        return next_tok, new_cache
+
+    def _prefill_impl(self, params, tokens, *, plen):
+        # batch-1 prefill on a fresh cache; scattered into the pool after
+        del plen
+        cache = tf.init_cache(self.cfg, 1, self.max_seq,
+                              cache_dtype=jnp.float32)
+        logits, _, new_cache = tf.forward(self.cfg, params, tokens,
+                                          ctx=self.ctx, cache=cache)
+        next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return next_tok, new_cache
+
+    @staticmethod
+    def _batch_dim(key: str) -> int:
+        return 0 if key in ("lengths", "memory") else 1
+
+    def _scatter_slot(self, pool: dict, single: dict, slot: int) -> dict:
+        out = {}
+        for k, v in pool.items():
+            bd = self._batch_dim(k)
+            row = jnp.take(single[k], 0, axis=bd)
+            if bd == 0:
+                out[k] = v.at[slot].set(row.astype(v.dtype))
+            else:
+                out[k] = v.at[:, slot].set(row.astype(v.dtype))
+        return out
+
+    # -- host scheduling ------------------------------------------------------
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _admit(self):
+        for slot in range(self.slots):
+            if slot in self.active or not self.queue:
+                continue
+            req = self.queue.pop(0)
+            plen = len(req.prompt)
+            toks = jnp.asarray(req.prompt, jnp.int32)[None, :]
+            next_tok, single = self._prefill_one(self.params, toks,
+                                                 plen=plen)
+            self.cache = self._scatter_slot(self.cache, single, slot)
+            req.out_tokens.append(int(next_tok[0]))
+            self.active[slot] = req
+
+    def step(self) -> list[Request]:
+        """One engine step: admit waiting requests, decode one token for
+        every active slot. Returns requests completed this step."""
+        self._admit()
+        if not self.active:
+            return []
+        tokens = np.zeros((self.slots, 1), np.int32)
+        mask = np.zeros((self.slots,), bool)
+        for slot, req in self.active.items():
+            tokens[slot, 0] = req.out_tokens[-1]
+            mask[slot] = True
+        temps = np.zeros((self.slots,), np.float32)
+        for slot, req in self.active.items():
+            temps[slot] = req.temperature
+        self._key, sub = jax.random.split(self._key)
+        next_tok, self.cache = self._decode(self.params, self.cache,
+                                            jnp.asarray(tokens),
+                                            jnp.asarray(mask),
+                                            jnp.asarray(temps), sub)
+        finished = []
+        for slot, req in list(self.active.items()):
+            tok = int(next_tok[slot])
+            req.out_tokens.append(tok)
+            if len(req.out_tokens) >= req.max_new_tokens \
+                    or tok == req.eos_id:
+                req.done = True
+                finished.append(req)
+                del self.active[slot]
+        return finished
+
+    def run_to_completion(self, max_steps: int = 1000) -> list[Request]:
+        done = []
+        for _ in range(max_steps):
+            done += self.step()
+            if not self.active and not self.queue:
+                break
+        return done

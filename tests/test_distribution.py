@@ -1,0 +1,142 @@
+"""Distribution layer: chaining overlap kernels, sharding rules, HLO
+analyzer, small-mesh train-step parity (sharded == single-device)."""
+import numpy as np
+import pytest
+
+from conftest import run_devices
+
+
+def test_all_gather_matmul_overlap():
+    code = """
+import jax, numpy as np, jax.numpy as jnp
+from repro.launch.mesh import make_mesh
+from repro.core.chaining import all_gather_matmul, matmul_reduce_scatter
+mesh = make_mesh(1, 4)
+rng = np.random.RandomState(0)
+x = jnp.asarray(rng.randn(8, 16), jnp.float32)     # (m, k) m sharded
+w = jnp.asarray(rng.randn(16, 12), jnp.float32)
+y = all_gather_matmul(x, w, mesh, "model")
+np.testing.assert_allclose(np.asarray(y), np.asarray(x) @ np.asarray(w),
+                           rtol=1e-4, atol=1e-4)
+# reduce-scatter variant: w sharded on k
+x2 = jnp.asarray(rng.randn(8, 16), jnp.float32)
+w2 = jnp.asarray(rng.randn(16, 12), jnp.float32)
+y2 = matmul_reduce_scatter(x2, w2, mesh, "model")
+np.testing.assert_allclose(np.asarray(y2), np.asarray(x2) @ np.asarray(w2),
+                           rtol=1e-4, atol=1e-4)
+print("CHAIN_OK")
+"""
+    assert "CHAIN_OK" in run_devices(code, n_devices=4)
+
+
+def test_sharded_train_step_matches_single_device():
+    """Same seed, same batch: loss on a 2x2 mesh == single device."""
+    code = """
+import jax, numpy as np, jax.numpy as jnp
+from repro.configs import get_config, reduced
+from repro.models.layers import init_params
+from repro.models import transformer as tf
+from repro.models.sharding import MeshCtx
+from repro.optim import adamw
+from repro.train import step as step_lib
+from repro.launch.mesh import make_mesh
+
+cfg = reduced(get_config("tinyllama-1.1b"), compute_dtype="float32")
+params = init_params(tf.model_template(cfg), jax.random.PRNGKey(0))
+toks = jax.random.randint(jax.random.PRNGKey(1), (4, 16), 0, cfg.vocab_size)
+batch = {"tokens": toks, "labels": jnp.roll(toks, -1, 1)}
+opt = adamw.OptConfig()
+state = {"params": params, "opt": adamw.init(opt, params)}
+
+ctx0 = MeshCtx(mesh=None)
+b0 = step_lib.make_train_step(cfg, opt, ctx0)
+_, m0 = jax.jit(b0.step_fn)(state, batch)
+
+mesh = make_mesh(2, 2)
+ctx1 = MeshCtx(mesh=mesh, batch_axes=("data",))
+b1 = step_lib.make_train_step(cfg, opt, ctx1)
+st_sh = step_lib.named_for(b1.state_specs, b1.abstract_state, mesh)
+bt_sh = step_lib.named_for(b1.batch_specs, batch, mesh)
+with mesh:
+    fn = jax.jit(b1.step_fn, in_shardings=(st_sh, bt_sh),
+                 out_shardings=(st_sh, None))
+    state_sh = jax.device_put(state, st_sh)
+    batch_sh = jax.device_put(batch, bt_sh)
+    _, m1 = fn(state_sh, batch_sh)
+d = abs(float(m0["loss"]) - float(m1["loss"]))
+assert d < 5e-4, (float(m0["loss"]), float(m1["loss"]))
+print("PARITY_OK", float(m0["loss"]))
+"""
+    assert "PARITY_OK" in run_devices(code, n_devices=4)
+
+
+def test_hlo_analyzer_counts_while_trip():
+    code = """
+import jax, jax.numpy as jnp
+from repro.core.hlo_analysis import analyze
+
+def scanned(x, w):
+    def body(c, wi):
+        return jnp.dot(c, wi, preferred_element_type=jnp.float32), None
+    y, _ = jax.lax.scan(body, x, w)
+    return y
+
+x = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+w = jax.ShapeDtypeStruct((8, 64, 64), jnp.float32)
+hlo = jax.jit(scanned).lower(x, w).compile().as_text()
+st = analyze(hlo)
+expect = 8 * 2 * 64**3
+assert 0.9 * expect <= st.flops <= 1.2 * expect, (st.flops, expect)
+print("HLO_OK")
+"""
+    assert "HLO_OK" in run_devices(code, n_devices=1)
+
+
+def test_hlo_analyzer_collectives():
+    code = """
+import jax, numpy as np, jax.numpy as jnp
+from jax.sharding import PartitionSpec as PS, NamedSharding
+from repro.launch.mesh import make_mesh
+from repro.core.hlo_analysis import analyze
+mesh = make_mesh(1, 4)
+
+def f(x):  # row-sharded x, force an all-gather via full-matrix use
+    return jnp.sum(x * 2.0) + x.sum()
+
+x = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+with mesh:
+    g = jax.jit(lambda a: jax.lax.with_sharding_constraint(a @ a.T, PS(None, None)),
+                in_shardings=NamedSharding(mesh, PS("model", None)))
+    hlo = g.lower(x).compile().as_text()
+st = analyze(hlo, n_devices=4)
+assert st.collective_bytes > 0, "expected at least one collective"
+print("COLL_OK", st.collective_by_kind)
+"""
+    assert "COLL_OK" in run_devices(code, n_devices=4)
+
+
+def test_mesh_constructors():
+    code = """
+from repro.launch.mesh import make_production_mesh, make_mesh, elastic_mesh
+m = make_production_mesh()
+assert m.devices.shape == (16, 16) and m.axis_names == ("data", "model")
+m2 = make_production_mesh(multi_pod=True)
+assert m2.devices.shape == (2, 16, 16)
+assert m2.axis_names == ("pod", "data", "model")
+em, data = elastic_mesh(300, model=16)
+assert em.devices.shape == (18, 16) and data == 18
+print("MESH_OK")
+"""
+    assert "MESH_OK" in run_devices(code, n_devices=512, timeout=300)
+
+
+def test_roofline_terms_math():
+    from repro.core.roofline import build, model_flops
+    from repro.configs import get_config, SHAPES
+    cfg = get_config("tinyllama-1.1b")
+    mf = model_flops(cfg, SHAPES["train_4k"])
+    assert mf == 6.0 * cfg.active_param_count() * 256 * 4096
+    hlo = "ENTRY %main () -> f32[] {\n}\n"
+    rl = build(cfg, SHAPES["train_4k"], "test", 256, hlo)
+    assert rl.compute_s == 0 and rl.bottleneck in ("compute", "memory",
+                                                   "collective")

@@ -1,0 +1,185 @@
+"""Per-kernel shape/dtype sweeps + hypothesis properties, each Pallas
+kernel (interpret=True) vs its pure-jnp oracle in kernels/ref.py."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+TOL = {jnp.float32: 2e-5, jnp.bfloat16: 2e-2}
+
+
+def _tol(dtype):
+    return TOL[jnp.bfloat16 if dtype == jnp.bfloat16 else jnp.float32]
+
+
+# ---------------------------------------------------------------------------
+# matmul
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("m,k,n,bm,bn,bk", [
+    (8, 8, 8, 8, 8, 8),
+    (32, 16, 24, 8, 8, 8),
+    (64, 128, 32, 16, 16, 32),
+    (128, 64, 128, 128, 128, 64),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_matmul_sweep(m, k, n, bm, bn, bk, dtype, rng):
+    a = jnp.asarray(rng.randn(m, k), dtype)
+    b = jnp.asarray(rng.randn(k, n), dtype)
+    got = ops.matmul(a, b, bm=bm, bn=bn, bk=bk, interpret=True)
+    want = ref.matmul_ref(a, b)
+    assert got.dtype == a.dtype and got.shape == (m, n)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=_tol(dtype), atol=_tol(dtype) * 4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(mm=st.integers(1, 4), kk=st.integers(1, 4), nn=st.integers(1, 4),
+       seed=st.integers(0, 2**31 - 1))
+def test_matmul_property(mm, kk, nn, seed):
+    r = np.random.RandomState(seed)
+    m, k, n = 8 * mm, 8 * kk, 8 * nn
+    a = jnp.asarray(r.randn(m, k), jnp.float32)
+    b = jnp.asarray(r.randn(k, n), jnp.float32)
+    got = ops.matmul(a, b, bm=8, bn=8, bk=8, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref.matmul_ref(a, b)),
+                               rtol=2e-5, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# axpy
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n,block", [(64, 64), (1024, 128), (4096, 1024)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_axpy_sweep(n, block, dtype, rng):
+    x = jnp.asarray(rng.randn(n), dtype)
+    y = jnp.asarray(rng.randn(n), dtype)
+    got = ops.axpy(2.5, x, y, block=block, interpret=True)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(ref.axpy_ref(2.5, x, y), np.float32),
+                               rtol=_tol(dtype), atol=_tol(dtype))
+
+
+@settings(max_examples=10, deadline=None)
+@given(nb=st.integers(1, 8), alpha=st.floats(-4, 4), seed=st.integers(0, 999))
+def test_axpy_property(nb, alpha, seed):
+    r = np.random.RandomState(seed)
+    n = 32 * nb
+    x = jnp.asarray(r.randn(n), jnp.float32)
+    y = jnp.asarray(r.randn(n), jnp.float32)
+    got = ops.axpy(alpha, x, y, block=32, interpret=True)
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(ref.axpy_ref(alpha, x, y)),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# conv (the paper's DCONV shape family, scaled down + GoogLeNet-1 slice)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("c,h,w,oc,kh,kw", [
+    (1, 8, 16, 2, 3, 3),
+    (3, 12, 20, 4, 7, 7),
+    (3, 10, 118, 8, 7, 7),   # GoogLeNet layer-1 row geometry (oc reduced)
+])
+@pytest.mark.parametrize("dtype", [jnp.float32])
+def test_conv_sweep(c, h, w, oc, kh, kw, dtype, rng):
+    x = jnp.asarray(rng.randn(c, h, w), dtype)
+    wgt = jnp.asarray(rng.randn(oc, c, kh, kw), dtype) * 0.2
+    got = ops.conv2d(x, wgt, interpret=True)
+    want = ref.conv2d_ref(x, wgt)
+    assert got.shape == want.shape == (oc, h - kh + 1, w - kw + 1)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("b,h,sq,sk,d,bq,bk,causal", [
+    (1, 2, 16, 16, 8, 8, 8, True),
+    (2, 2, 32, 32, 16, 16, 8, True),
+    (1, 1, 8, 64, 8, 8, 16, False),
+    (2, 4, 64, 64, 32, 32, 32, True),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(b, h, sq, sk, d, bq, bk, causal, dtype, rng):
+    if causal and sq != sk:
+        pytest.skip("causal requires square here")
+    q = jnp.asarray(rng.randn(b, h, sq, d), dtype)
+    k = jnp.asarray(rng.randn(b, h, sk, d), dtype)
+    v = jnp.asarray(rng.randn(b, h, sk, d), dtype)
+    got = ops.flash_attention(q, k, v, causal=causal, bq=bq, bk=bk,
+                              interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=_tol(dtype) * 2, atol=_tol(dtype) * 4)
+
+
+@settings(max_examples=8, deadline=None)
+@given(sq=st.sampled_from([16, 32]), d=st.sampled_from([8, 16]),
+       seed=st.integers(0, 999))
+def test_flash_attention_property(sq, d, seed):
+    r = np.random.RandomState(seed)
+    q = jnp.asarray(r.randn(1, 2, sq, d), jnp.float32)
+    k = jnp.asarray(r.randn(1, 2, sq, d), jnp.float32)
+    v = jnp.asarray(r.randn(1, 2, sq, d), jnp.float32)
+    got = ops.flash_attention(q, k, v, causal=True, bq=8, bk=8,
+                              interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# ssm scan
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("bh,s,n,p,chunk", [
+    (2, 32, 8, 8, 8),
+    (4, 64, 16, 32, 16),
+    (1, 128, 32, 16, 64),
+])
+def test_ssm_scan_sweep(bh, s, n, p, chunk, rng):
+    q = jnp.asarray(rng.randn(bh, s, n), jnp.float32)
+    k = jnp.asarray(rng.randn(bh, s, n), jnp.float32) * 0.3
+    v = jnp.asarray(rng.randn(bh, s, p), jnp.float32)
+    ld = -jnp.asarray(rng.rand(bh, s), jnp.float32) * 0.5
+    sc = jnp.asarray(rng.rand(bh, s), jnp.float32)
+    got = ops.ssm_scan(q, k, v, ld, sc, chunk=chunk, interpret=True)
+    want = ref.ssm_scan_ref(q, k, v, ld, sc)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=3e-4, atol=3e-4)
+
+
+def test_ssm_scan_matches_model_core(rng):
+    """Kernel semantics == models/ssm.chunked_linear_attention (B,S,H form)."""
+    from repro.models.ssm import chunked_linear_attention
+    b, s, h, n, p = 2, 64, 2, 8, 16
+    q = jnp.asarray(rng.randn(b, s, h, n), jnp.float32)
+    k = jnp.asarray(rng.randn(b, s, h, n), jnp.float32) * 0.3
+    v = jnp.asarray(rng.randn(b, s, h, p), jnp.float32)
+    ld = -jnp.asarray(rng.rand(b, s, h), jnp.float32) * 0.5
+    sc = jnp.asarray(rng.rand(b, s, h), jnp.float32)
+    y_model, _ = chunked_linear_attention(q, k, v, ld, sc, chunk=16)
+    qf = q.transpose(0, 2, 1, 3).reshape(b * h, s, n)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * h, s, n)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * h, s, p)
+    ldf = ld.transpose(0, 2, 1).reshape(b * h, s)
+    scf = sc.transpose(0, 2, 1).reshape(b * h, s)
+    y_kern = ops.ssm_scan(qf, kf, vf, ldf, scf, chunk=16, interpret=True)
+    y_kern = y_kern.reshape(b, h, s, p).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(y_kern), np.asarray(y_model),
+                               rtol=3e-4, atol=3e-4)

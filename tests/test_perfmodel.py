@@ -1,0 +1,96 @@
+"""Validate the Ara cycle model against every published number."""
+import pytest
+
+from repro.configs.ara import (AraConfig, PAPER_CONV_FLOP_PER_CYCLE,
+                               PAPER_DAXPY_FLOP_PER_CYCLE,
+                               PAPER_HWACHA_MATMUL_UTIL, PAPER_MATMUL_UTIL,
+                               PAPER_MATMUL_UTIL_256, PAPER_TABLE3,
+                               NOMINAL_CLOCK_GHZ)
+from repro.core import perfmodel as pm
+
+
+@pytest.mark.parametrize("pi_n,paper", sorted(PAPER_MATMUL_UTIL.items()))
+def test_matmul_table1(pi_n, paper):
+    pi, n = pi_n
+    got = pm.matmul_perf(AraConfig(lanes=pi // 2), n).utilization
+    assert abs(got - paper) / paper < 0.15, (pi, n, got, paper)
+
+
+@pytest.mark.parametrize("lanes,paper", PAPER_MATMUL_UTIL_256.items())
+def test_matmul_256(lanes, paper):
+    got = pm.matmul_perf(AraConfig(lanes=lanes), 256).utilization
+    assert abs(got - paper) / paper < 0.05, (lanes, got, paper)
+
+
+@pytest.mark.parametrize("lanes,paper", PAPER_DAXPY_FLOP_PER_CYCLE.items())
+def test_daxpy(lanes, paper):
+    got = pm.daxpy_perf(AraConfig(lanes=lanes), 256).flop_per_cycle
+    assert abs(got - paper) / paper < 0.02, (lanes, got, paper)
+
+
+def test_daxpy_ideal_vs_measured_cycles():
+    # §V-B: ideal 96 cycles -> measured 120 at n=256, l=16
+    cfg = AraConfig(lanes=16)
+    assert pm.daxpy_cycles(cfg, 256) == pytest.approx(120)
+    assert 6 * 256 / 16 == pytest.approx(96)
+
+
+@pytest.mark.parametrize("lanes,paper", PAPER_CONV_FLOP_PER_CYCLE.items())
+def test_conv(lanes, paper):
+    got = pm.dconv_perf(AraConfig(lanes=lanes)).flop_per_cycle
+    assert abs(got - paper) / paper < 0.05, (lanes, got, paper)
+
+
+@pytest.mark.parametrize("pi_n,paper", sorted(PAPER_HWACHA_MATMUL_UTIL.items()))
+def test_hwacha_comparator(pi_n, paper):
+    pi, n = pi_n
+    got = pm.hwacha_matmul_perf(pi // 2, n).utilization
+    assert abs(got - paper) / paper < 0.05, (pi, got, paper)
+
+
+def test_ara_beats_hwacha_66_percent():
+    """§V-D headline: 2-lane-equivalent (Pi=8) Ara utilizes FPUs 66% more
+    than Hwacha at 32x32."""
+    ara = pm.matmul_perf(AraConfig(lanes=4), 32).utilization
+    hw = pm.hwacha_matmul_perf(4, 32).utilization
+    assert ara / hw > 1.5
+
+
+def test_issue_rate_boundary():
+    """Eq. (2): small-n performance capped by Pi*tau/delta."""
+    cfg = AraConfig(lanes=16)
+    for n in (16, 32, 64):
+        bound = pm.matmul_issue_bound(cfg, n)
+        got = pm.matmul_perf(cfg, n).flop_per_cycle
+        assert got <= bound * 1.02, (n, got, bound)
+
+
+def test_roofline_knee():
+    """Compute-bound above I = 0.5 DP-FLOP/B (paper §IV)."""
+    cfg = AraConfig(lanes=8)
+    assert pm.matmul_roofline(cfg, 8) == cfg.mem_bytes_per_cycle * 0.5
+    assert pm.matmul_roofline(cfg, 256) == cfg.peak_dp_flop_per_cycle
+
+
+@pytest.mark.parametrize("lanes", [2, 4, 8, 16])
+@pytest.mark.parametrize("kidx,kernel", [(6, "matmul"), (7, "dconv"),
+                                         (8, "daxpy")])
+def test_table3_efficiency(lanes, kidx, kernel):
+    paper_eff = PAPER_TABLE3[lanes][kidx]
+    got = pm.efficiency_gflops_per_w(kernel, lanes)
+    assert abs(got - paper_eff) / paper_eff < 0.16, (kernel, lanes, got)
+
+
+def test_gflops_table3_performance_column():
+    # performance column: matmul 32.4 DP-GFLOPS at 16 lanes, 1.04 GHz
+    perf = pm.matmul_perf(AraConfig(lanes=16), 256)
+    got = perf.gflops(NOMINAL_CLOCK_GHZ[16])
+    assert abs(got - 32.4) / 32.4 < 0.06
+
+
+def test_multi_precision_peaks():
+    cfg = AraConfig(lanes=4)
+    assert cfg.peak_flop_per_cycle(64) == 8
+    assert cfg.peak_flop_per_cycle(32) == 16
+    assert cfg.peak_flop_per_cycle(16) == 32
+    assert cfg.peak_flop_per_cycle(8) == 64

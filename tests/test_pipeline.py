@@ -1,0 +1,100 @@
+"""Pipeline parallelism: GPipe schedule == sequential stage application,
+gradients flow through the pipelined graph, bubble accounting."""
+import pytest
+
+from repro.train.pipeline import bubble_fraction
+from conftest import run_devices
+
+
+def test_bubble_fraction():
+    assert bubble_fraction(4, 4) == pytest.approx(3 / 7)
+    assert bubble_fraction(2, 16) == pytest.approx(1 / 17)
+    assert bubble_fraction(1, 8) == 0.0
+
+
+def test_pipeline_matches_sequential():
+    code = """
+import jax, numpy as np, jax.numpy as jnp
+from repro.launch.mesh import make_mesh
+from repro.train.pipeline import pipeline_apply
+rng = np.random.RandomState(0)
+S, M, mb, d = 4, 6, 3, 8
+mesh = jax.sharding.Mesh(np.array(jax.devices()[:S]), ("pod",))
+W = jnp.asarray(rng.randn(S, d, d) * 0.3, jnp.float32)
+b = jnp.asarray(rng.randn(S, d) * 0.1, jnp.float32)
+params = {"w": W, "b": b}
+
+def stage_fn(p, x):
+    return jnp.tanh(x @ p["w"] + p["b"])
+
+x = jnp.asarray(rng.randn(M, mb, d), jnp.float32)
+y = pipeline_apply(stage_fn, params, x, mesh, "pod")
+# sequential oracle
+want = x
+for s in range(S):
+    ps = {"w": W[s], "b": b[s]}
+    want = jax.vmap(lambda xx: stage_fn(ps, xx))(want)
+err = np.abs(np.asarray(y) - np.asarray(want)).max()
+assert err < 1e-5, err
+
+# gradients through the pipeline == gradients through the oracle
+def pipe_loss(params):
+    out = pipeline_apply(stage_fn, params, x, mesh, "pod")
+    return jnp.sum(out ** 2)
+
+def seq_loss(params):
+    h = x
+    for s in range(S):
+        ps = jax.tree_util.tree_map(lambda a: a[s], params)
+        h = jax.vmap(lambda xx: stage_fn(ps, xx))(h)
+    return jnp.sum(h ** 2)
+
+g1 = jax.grad(pipe_loss)(params)
+g2 = jax.grad(seq_loss)(params)
+gerr = max(np.abs(np.asarray(g1[k]) - np.asarray(g2[k])).max()
+           for k in ("w", "b"))
+assert gerr < 1e-4, gerr
+print("PIPE_OK")
+"""
+    assert "PIPE_OK" in run_devices(code, n_devices=4)
+
+
+def test_pipeline_transformer_stages():
+    """Real transformer blocks as pipeline stages == scanned reference."""
+    code = """
+import dataclasses, jax, numpy as np, jax.numpy as jnp
+from repro.configs import get_config, reduced
+from repro.launch.mesh import make_mesh
+from repro.models import transformer as tf
+from repro.models.layers import init_params
+from repro.train.pipeline import pipeline_apply
+
+cfg = reduced(get_config("tinyllama-1.1b"), n_layers=4,
+              compute_dtype="float32")
+params = init_params(tf.model_template(cfg), jax.random.PRNGKey(0))
+mesh = jax.sharding.Mesh(np.array(jax.devices()[:4]), ("pod",))
+M, mb, S_len = 3, 2, 8
+rng = np.random.RandomState(0)
+x = jnp.asarray(rng.randn(M, mb, S_len, cfg.d_model), jnp.float32)
+positions = jnp.broadcast_to(jnp.arange(S_len, dtype=jnp.int32)[None],
+                             (mb, S_len))
+
+def stage_fn(layer_params, h):
+    out, _ = tf.dense_block(cfg, layer_params, h, positions)
+    return out
+
+y = pipeline_apply(stage_fn, params["layers"], x, mesh, "pod")
+# oracle: apply the 4 layers sequentially per microbatch
+want = []
+for m in range(M):
+    h = x[m]
+    for layer in range(4):
+        p_l = jax.tree_util.tree_map(lambda a: a[layer], params["layers"])
+        h = stage_fn(p_l, h)
+    want.append(h)
+want = jnp.stack(want)
+err = np.abs(np.asarray(y) - np.asarray(want)).max()
+assert err < 1e-4, err
+print("PIPE_TF_OK")
+"""
+    assert "PIPE_TF_OK" in run_devices(code, n_devices=4)
