@@ -1,0 +1,131 @@
+"""Multi-precision sweep (§III-E4): dtype × size, three rulers.
+
+1. Analytical Ara model: matmul FLOP/cycle at SEW 64/32/16 from
+   perfmodel.matmul_cycles(ew_bits=) — the datapath-split prediction.
+2. Instruction scoreboard: simulate_timing over the SEW-parameterized
+   matmul program (FPU-bound: fixed vlmax so strip counts match).
+3. TPU kernels: wall time of the Pallas matmul at fp32/bf16/f16 per size.
+   On TPU this is the real MXU rate; on CPU hosts the kernels drop to the
+   jnp reference path (interpret mode is a correctness tool, not a perf
+   path) so achieved speedups there measure the host BLAS, not the MXU —
+   the backend is stamped on every row.
+
+Every row carries ``predicted_speedup`` from the shared
+precision.ARA_FLOP_PER_CYCLE_PER_LANE table so achieved vs predicted can
+be charted directly.
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.ara import AraConfig
+from repro.core import isa
+from repro.core import perfmodel as pm
+from repro.core.precision import (ARA_FLOP_PER_CYCLE_PER_LANE, Policy,
+                                  ara_speedup_vs_dp, sew_for_dtype)
+from repro.core.vector_engine import simulate_timing
+from repro.kernels import ops, ref
+
+SEWS = isa.SEWS
+DTYPES = {"float32": jnp.float32, "bfloat16": jnp.bfloat16,
+          "float16": jnp.float16}
+
+
+def model_rows(lanes=(2, 16), sizes=(64, 256)):
+    out = []
+    for l in lanes:
+        cfg = AraConfig(lanes=l)
+        for n in sizes:
+            base = pm.matmul_perf(cfg, n, ew_bits=64).flop_per_cycle
+            for sew in SEWS:
+                perf = pm.matmul_perf(cfg, n, ew_bits=sew)
+                out.append({
+                    "source": "perfmodel", "lanes": l, "n": n, "sew": sew,
+                    "flop_per_cycle": round(perf.flop_per_cycle, 3),
+                    "utilization": round(perf.utilization, 4),
+                    "achieved_speedup": round(perf.flop_per_cycle / base, 3),
+                    "predicted_speedup": ara_speedup_vs_dp(sew),
+                })
+    return out
+
+
+def scoreboard_rows(lanes=2, n=256):
+    cfg = AraConfig(lanes=lanes)
+    flops = 2.0 * n ** 3
+    out = []
+    base = None
+    for sew in SEWS:
+        prog = isa.matmul_program(n, 0, n * n, 2 * n * n, t=4, vlmax=n,
+                                  sew=sew)
+        tr = simulate_timing(prog, cfg, vlmax=n)
+        fpc = tr.flop_per_cycle(flops)
+        if base is None:
+            base = fpc
+        out.append({
+            "source": "scoreboard", "lanes": lanes, "n": n, "sew": sew,
+            "flop_per_cycle": round(fpc, 3),
+            "achieved_speedup": round(fpc / base, 3),
+            "predicted_speedup": ara_speedup_vs_dp(sew),
+        })
+    return out
+
+
+def _time(fn, *args, iters=3):
+    jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters
+
+
+def kernel_rows(sizes=(256, 512)):
+    backend = jax.default_backend()
+    on_tpu = backend == "tpu"
+    rng = np.random.RandomState(0)
+    out = []
+    for n in sizes:
+        a32 = jnp.asarray(rng.randn(n, n), jnp.float32)
+        b32 = jnp.asarray(rng.randn(n, n), jnp.float32)
+        flops = 2.0 * n ** 3
+        base_s = None
+        for name, dt in DTYPES.items():
+            pol = Policy(compute_dtype=name)
+            if on_tpu:
+                fn = jax.jit(lambda x, y, p=pol: ops.matmul(x, y, policy=p))
+            else:
+                # interpret-mode Pallas is orders slower than the host
+                # BLAS; time the jnp reference at the same dtype instead
+                fn = jax.jit(lambda x, y, d=dt: ref.matmul_ref(
+                    x.astype(d), y.astype(d)))
+            secs = _time(fn, a32, b32)
+            if base_s is None:
+                base_s = secs
+            sew = sew_for_dtype(dt)
+            out.append({
+                "source": f"pallas_{backend}", "n": n, "dtype": name,
+                "sew_equiv": sew,
+                "us_per_call": round(secs * 1e6, 1),
+                "gflops": round(flops / secs / 1e9, 2),
+                "achieved_speedup": round(base_s / secs, 3),
+                # kernel baseline is fp32, so normalize the datapath-split
+                # prediction to fp32 (= SEW 32), not to the 64-bit ruler
+                "predicted_speedup": round(
+                    ara_speedup_vs_dp(sew) / ara_speedup_vs_dp(32), 3),
+            })
+    return out
+
+
+def main(emit):
+    for r in model_rows():
+        emit("multiprecision", r)
+    for r in scoreboard_rows():
+        emit("multiprecision", r)
+    for r in kernel_rows():
+        emit("multiprecision", r)
+
+
+if __name__ == "__main__":
+    main(lambda table, row: print(
+        ",".join([table] + [f"{k}={v}" for k, v in row.items()])))

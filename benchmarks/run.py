@@ -19,13 +19,15 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (fig5_matmul, fig6_kernels, kernel_bench,
-                            table1_hwacha, table3_efficiency)
+                            multiprecision, table1_hwacha,
+                            table3_efficiency)
     mods = {
         "fig5_matmul": fig5_matmul,
         "fig6_kernels": fig6_kernels,
         "table1_hwacha": table1_hwacha,
         "table3_efficiency": table3_efficiency,
         "kernel_bench": kernel_bench,
+        "multiprecision": multiprecision,
     }
     failures = 0
     for name, mod in mods.items():

@@ -34,12 +34,21 @@ class AraConfig:
     @property
     def vlmax_dp(self) -> int:
         """Max DP elements per vector register (VRF split over 32 regs)."""
+        return self.vlmax(64)
+
+    def vlmax(self, sew_bits: int = 64) -> int:
+        """Max elements per vector register at a given SEW: registers are
+        fixed-size byte slices of the VRF, so halving the element width
+        doubles the element capacity (§III-E4)."""
         total_bytes = self.lanes * self.vrf_kib_per_lane * 1024
-        return total_bytes // 32 // 8
+        return total_bytes // 32 // (sew_bits // 8)
 
     def peak_flop_per_cycle(self, ew_bits: int = 64) -> int:
-        """Multi-precision: the 64-bit datapath subdivides (64/ew) ways."""
-        return self.peak_dp_flop_per_cycle * (64 // ew_bits)
+        """Multi-precision: the 64-bit datapath subdivides (64/ew) ways.
+        Wired to core.precision.ARA_FLOP_PER_CYCLE_PER_LANE — the single
+        source both the analytical model and the TPU kernels consult."""
+        from repro.core.precision import ARA_FLOP_PER_CYCLE_PER_LANE
+        return self.lanes * ARA_FLOP_PER_CYCLE_PER_LANE[ew_bits]
 
 
 # Nominal clock per instance (Table III)

@@ -15,6 +15,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as PS
 
+from repro.core.compat import shard_map
+
 
 def all_gather_matmul(x, w, mesh, axis: str, transpose: bool = False):
     """y = all_gather(x, axis) @ w, overlapped.
@@ -44,9 +46,9 @@ def all_gather_matmul(x, w, mesh, axis: str, transpose: bool = False):
         buf, out = jax.lax.fori_loop(0, n_dev, body, (x_loc, out))
         return out
 
-    return jax.shard_map(device_fn, mesh=mesh,
-                         in_specs=(PS(axis, None), PS(None, None)),
-                         out_specs=PS(None, None), check_vma=False)(x, w)
+    return shard_map(device_fn, mesh=mesh,
+                     in_specs=(PS(axis, None), PS(None, None)),
+                     out_specs=PS(None, None), check_vma=False)(x, w)
 
 
 def matmul_reduce_scatter(x, w, mesh, axis: str):
@@ -78,6 +80,6 @@ def matmul_reduce_scatter(x, w, mesh, axis: str):
         acc = jax.lax.fori_loop(0, n_dev, body, acc0)
         return acc.astype(x_loc.dtype)
 
-    return jax.shard_map(device_fn, mesh=mesh,
-                         in_specs=(PS(None, axis), PS(axis, None)),
-                         out_specs=PS(axis, None), check_vma=False)(x, w)
+    return shard_map(device_fn, mesh=mesh,
+                     in_specs=(PS(None, axis), PS(axis, None)),
+                     out_specs=PS(axis, None), check_vma=False)(x, w)

@@ -1,0 +1,35 @@
+"""JAX API compatibility shims.
+
+``shard_map`` moved from ``jax.experimental.shard_map`` to ``jax.shard_map``
+(and its replication-check kwarg was renamed ``check_rep`` -> ``check_vma``)
+across jax releases. Every shard_map call in this repo goes through
+:func:`shard_map` below so the codebase runs on both API generations.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+
+@functools.lru_cache(maxsize=1)
+def _resolve():
+    """Return (shard_map_fn, check_kwarg_name) for the running jax."""
+    fn = getattr(jax, "shard_map", None)
+    if fn is not None:
+        return fn, "check_vma"
+    from jax.experimental.shard_map import shard_map as fn
+    return fn, "check_rep"
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma=None, **kwargs):
+    """Version-agnostic jax.shard_map.
+
+    ``check_vma`` maps onto the old API's ``check_rep`` when running on a
+    jax that predates the rename.
+    """
+    fn, check_kw = _resolve()
+    if check_vma is not None:
+        kwargs[check_kw] = check_vma
+    return fn(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+              **kwargs)

@@ -6,10 +6,30 @@ shard_map engine); timing by the engine's scoreboard (cross-validates
 core/perfmodel.py).
 
 Functional-unit mapping follows Fig. 3b:
-  FPU  — VFMA/VFADD/VFMUL          (64 bit/lane/cycle)
+  FPU  — VFMA/VFADD/VFMUL/VFWMUL/VFWMA/VFNCVT  (64 bit/lane/cycle)
   ALU  — VADD/VMUL/logic           (shares paths with SLDU)
   SLDU — VSLIDE/VINS/VEXT          (touches all lanes)
   VLSU — VLD/VST/VLDS/VGATHER      (single memory port, W = 32*lanes bit)
+
+Multi-precision / SEW semantics (§III-E4)
+-----------------------------------------
+``VSETVL(vl, sew)`` sets both the vector length AND the selected element
+width. SEW ∈ {64, 32, 16} bit; the 64-bit lane datapath subdivides into
+64/SEW parallel sub-words (1×64 / 2×32 / 4×16), so peak FLOP/cycle — and
+the scoreboard's FPU occupancy — scale by 64/SEW. VLMAX likewise scales:
+a vector register is a fixed number of BYTES (VRF bytes / 32 regs), so it
+holds (64/SEW)× more elements at narrower widths; the engines expose this
+via ``AraConfig.vlmax(sew)``.
+
+Arithmetic executes at SEW precision: every result is rounded to the
+SEW-wide float format (f64/f32/f16) before it lands in the register file,
+and loads quantize memory values to SEW on the way in. Widening ops
+(``VFWMUL``, ``VFWMA``) read SEW-wide sources and produce 2·SEW-wide
+results with a single rounding — the RVV vfwmul/vfwmacc contract, and the
+model for "multiply narrow, accumulate wide" mixed-precision kernels.
+``VFNCVT`` narrows a 2·SEW-wide register back to SEW. Widening ops are
+illegal at SEW=64 (2·SEW would exceed the 64-bit datapath, RVV's
+ELEN limit) — the engines raise on such programs.
 """
 from __future__ import annotations
 
@@ -17,6 +37,7 @@ import dataclasses
 from typing import Optional
 
 NUM_VREGS = 32
+SEWS = (64, 32, 16)              # supported selected element widths (bits)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -27,6 +48,7 @@ class Insn:
 @dataclasses.dataclass(frozen=True)
 class VSETVL(Insn):
     vl: int                      # requested vector length (AVL)
+    sew: int = 64                # selected element width (bits)
     unit = "seq"
 
 
@@ -93,6 +115,29 @@ class VFMUL(Insn):
 
 
 @dataclasses.dataclass(frozen=True)
+class VFWMUL(Insn):              # widening: vd(2*sew) <- va(sew) * vb(sew)
+    vd: int
+    va: int
+    vb: int
+    unit = "fpu"
+
+
+@dataclasses.dataclass(frozen=True)
+class VFWMA(Insn):               # widening FMA: vd(2*sew) += va(sew)*vb(sew)
+    vd: int
+    va: int
+    vb: int
+    unit = "fpu"
+
+
+@dataclasses.dataclass(frozen=True)
+class VFNCVT(Insn):              # narrowing convert: vd(sew) <- vs(2*sew)
+    vd: int
+    vs: int
+    unit = "fpu"
+
+
+@dataclasses.dataclass(frozen=True)
 class VADD(Insn):                # integer ALU
     vd: int
     va: int
@@ -136,14 +181,14 @@ class LDSCALAR(Insn):            # Ariane-side scalar load feeding VINS
 
 
 def daxpy_program(n: int, x_addr: int, y_addr: int, alpha_sreg: int = 0,
-                  vlmax: Optional[int] = None):
+                  vlmax: Optional[int] = None, sew: int = 64):
     """Y <- alpha*X + Y, strip-mined (Fig. 9 style)."""
     vlmax = vlmax or n
     prog = []
     c = 0
     while c < n:
         vl = min(n - c, vlmax)
-        prog += [VSETVL(vl),
+        prog += [VSETVL(vl, sew),
                  VLD(1, x_addr + c),
                  VLD(2, y_addr + c),
                  VINS(3, alpha_sreg),
@@ -154,14 +199,14 @@ def daxpy_program(n: int, x_addr: int, y_addr: int, alpha_sreg: int = 0,
 
 
 def matmul_program(n: int, a_addr: int, b_addr: int, c_addr: int,
-                   t: int = 4, vlmax: Optional[int] = None):
+                   t: int = 4, vlmax: Optional[int] = None, sew: int = 64):
     """Listing 1: C <- A B + C, row-major, tiles of t rows, strip-mined."""
     vlmax = vlmax or n
     prog = []
     col = 0
     while col < n:
         vl = min(n - col, vlmax)
-        prog.append(VSETVL(vl))
+        prog.append(VSETVL(vl, sew))
         for r0 in range(0, n, t):
             rows = min(t, n - r0)
             for j in range(rows):            # phase I

@@ -28,6 +28,7 @@ import dataclasses
 import math
 
 from repro.configs.ara import (AraConfig, NOMINAL_CLOCK_GHZ, PAPER_TABLE3)
+from repro.core.precision import ARA_FLOP_PER_CYCLE_PER_LANE
 
 # calibrated constants (grid-fit to Table I + §V; rms error 5.4%, worst
 # |err| 10.8%, marquee 256x256 points within 3% — see tests/test_perfmodel)
@@ -46,14 +47,21 @@ class KernelPerf:
     cycles: float
     flops: float
     lanes: int
+    ew_bits: int = 64            # element width the kernel executed at
 
     @property
     def flop_per_cycle(self) -> float:
         return self.flops / self.cycles
 
     @property
+    def peak_flop_per_cycle(self) -> int:
+        # per-precision peak: the 64-bit datapath subdivides (§III-E4);
+        # single source shared with AraConfig.peak_flop_per_cycle
+        return self.lanes * ARA_FLOP_PER_CYCLE_PER_LANE[self.ew_bits]
+
+    @property
     def utilization(self) -> float:
-        return self.flop_per_cycle / (2 * self.lanes)
+        return self.flop_per_cycle / self.peak_flop_per_cycle
 
     def gflops(self, clock_ghz: float) -> float:
         return self.flop_per_cycle * clock_ghz
@@ -66,26 +74,33 @@ class KernelPerf:
 
 def matmul_cycles(cfg: AraConfig, n: int, t: int = 4,
                   issue_interval: float | None = None,
-                  mem_bytes_per_cycle: float | None = None) -> float:
+                  mem_bytes_per_cycle: float | None = None,
+                  ew_bits: int = 64) -> float:
+    """Cycle model, multi-precision aware (§III-E4): at element width
+    ``ew_bits`` the FPU retires 64/ew elements/lane/cycle, memory moves
+    ew/8-byte elements, and VLMAX grows by 64/ew (fewer strip-mine trips).
+    """
     lanes = cfg.lanes
+    ways = 64 // ew_bits                     # datapath subdivision
+    ebytes = ew_bits / 8.0
     delta = issue_interval if issue_interval is not None \
         else cfg.issue_interval_cycles
     bw = mem_bytes_per_cycle if mem_bytes_per_cycle is not None \
         else cfg.mem_bytes_per_cycle
-    vlmax = cfg.vlmax_dp
+    vlmax = cfg.vlmax(ew_bits)
     cycles = 0.0
     c = 0
     while c < n:
         vl = min(n - c, vlmax)
         e = vl / lanes                       # elements per lane
-        row_mem = 8.0 * vl / bw              # one row's bytes / BW
+        row_mem = ebytes * vl / bw           # one row's bytes / BW
         n_blocks = math.ceil(n / t)
         per_block = 0.0
         # phase I + III: t C-row loads + t stores, burst startup each
         per_block += 2 * t * (row_mem + L_MEM)
         # phase II: n columns; per column one B-row vld (chained) and t vmadds
         issue_cycles = t * delta + VLD_ISSUE
-        fpu_cycles = t * e
+        fpu_cycles = t * e / ways
         # B row streams under compute; VLSU word collection across lanes
         # adds arbitration latency proportional to lane count (§VI-C)
         mem_cycles = row_mem + C_MEM_LANE * lanes
@@ -98,9 +113,9 @@ def matmul_cycles(cfg: AraConfig, n: int, t: int = 4,
     return cycles
 
 
-def matmul_perf(cfg: AraConfig, n: int, **kw) -> KernelPerf:
-    return KernelPerf("matmul", matmul_cycles(cfg, n, **kw),
-                      2.0 * n ** 3, cfg.lanes)
+def matmul_perf(cfg: AraConfig, n: int, ew_bits: int = 64, **kw) -> KernelPerf:
+    return KernelPerf("matmul", matmul_cycles(cfg, n, ew_bits=ew_bits, **kw),
+                      2.0 * n ** 3, cfg.lanes, ew_bits)
 
 
 def matmul_issue_bound(cfg: AraConfig, n: int) -> float:
@@ -110,10 +125,15 @@ def matmul_issue_bound(cfg: AraConfig, n: int) -> float:
     return pi * min(1.0, tau / cfg.issue_interval_cycles)
 
 
-def matmul_roofline(cfg: AraConfig, n: int) -> float:
-    """Classic roofline bound (FLOP/cycle): min(peak, beta * I)."""
-    intensity = n / 16.0                      # Eq. (1)
-    return min(cfg.peak_dp_flop_per_cycle,
+def matmul_roofline(cfg: AraConfig, n: int, ew_bits: int = 64) -> float:
+    """Classic roofline bound (FLOP/cycle): min(peak, beta * I).
+
+    Eq. (1) generalized to element width: I = 2n^3 / (2 * ebytes * n^2)
+    = n / (2 * ew/8) FLOP/B — narrower elements double the intensity AND
+    the compute peak, so the machine-balance point is width-invariant.
+    """
+    intensity = n / (2.0 * (ew_bits / 8.0))   # Eq. (1); n/16 at ew=64
+    return min(cfg.peak_flop_per_cycle(ew_bits),
                cfg.mem_bytes_per_cycle * intensity)
 
 
@@ -122,14 +142,17 @@ def matmul_roofline(cfg: AraConfig, n: int) -> float:
 # ---------------------------------------------------------------------------
 
 
-def daxpy_cycles(cfg: AraConfig, n: int) -> float:
-    # memory-bound: 24n bytes over 4*lanes B/cycle = 6n/lanes cycles,
-    # plus the paper's measured 24-cycle configuration overhead (§V-B)
-    return 6.0 * n / cfg.lanes + cfg.config_overhead_cycles
+def daxpy_cycles(cfg: AraConfig, n: int, ew_bits: int = 64) -> float:
+    # memory-bound: 3 * ew/8 * n bytes over 4*lanes B/cycle (= 6n/lanes at
+    # ew=64), plus the paper's measured 24-cycle config overhead (§V-B)
+    bytes_moved = 3.0 * (ew_bits / 8.0) * n
+    return bytes_moved / cfg.mem_bytes_per_cycle \
+        + cfg.config_overhead_cycles
 
 
-def daxpy_perf(cfg: AraConfig, n: int) -> KernelPerf:
-    return KernelPerf("daxpy", daxpy_cycles(cfg, n), 2.0 * n, cfg.lanes)
+def daxpy_perf(cfg: AraConfig, n: int, ew_bits: int = 64) -> KernelPerf:
+    return KernelPerf("daxpy", daxpy_cycles(cfg, n, ew_bits), 2.0 * n,
+                      cfg.lanes, ew_bits)
 
 
 # ---------------------------------------------------------------------------

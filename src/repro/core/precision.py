@@ -21,8 +21,32 @@ PEAKS_FLOPS = {
     "int8": 394e12,
 }
 
-# Ara's per-precision peak (FLOP/cycle/lane), the paper's datapath split
+# Ara's per-precision peak (FLOP/cycle/lane), the paper's datapath split.
+# SINGLE SOURCE for the multi-precision speedup claim: AraConfig
+# .peak_flop_per_cycle, perfmodel's per-ew utilization, and the kernel
+# benchmarks' predicted speedups all consult this table.
 ARA_FLOP_PER_CYCLE_PER_LANE = {64: 2, 32: 4, 16: 8, 8: 16}
+
+# SEW (bits) <-> numpy/jax float dtype name used by the vector engines.
+SEW_TO_DTYPE = {64: "float64", 32: "float32", 16: "float16"}
+DTYPE_TO_SEW = {"float64": 64, "float32": 32, "float16": 16,
+                "bfloat16": 16, "int8": 8}
+
+
+def dtype_for_sew(sew: int):
+    """Element dtype the engines execute at for a given SEW."""
+    return jnp.dtype(SEW_TO_DTYPE[sew])
+
+
+def sew_for_dtype(dtype) -> int:
+    """Datapath element width (bits) a dtype occupies on Ara's lanes."""
+    return DTYPE_TO_SEW[jnp.dtype(dtype).name]
+
+
+def ara_speedup_vs_dp(sew: int) -> float:
+    """Paper §III-E4 prediction: throughput gain vs the 64-bit datapath."""
+    return (ARA_FLOP_PER_CYCLE_PER_LANE[sew]
+            / ARA_FLOP_PER_CYCLE_PER_LANE[64])
 
 
 @dataclasses.dataclass(frozen=True)
@@ -34,6 +58,18 @@ class Policy:
 
     def peak_flops(self) -> float:
         return PEAKS_FLOPS[self.compute_dtype]
+
+    @property
+    def sew(self) -> int:
+        """Ara element width equivalent of the compute dtype."""
+        return sew_for_dtype(self.compute_dtype)
+
+    def ara_peak_flop_per_cycle(self, lanes: int) -> int:
+        """Ara-side peak at this policy's compute width."""
+        return lanes * ARA_FLOP_PER_CYCLE_PER_LANE[self.sew]
+
+    def ara_speedup(self) -> float:
+        return ara_speedup_vs_dp(self.sew)
 
     def cast_params(self, tree):
         import jax

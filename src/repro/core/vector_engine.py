@@ -9,14 +9,23 @@ Two execution backends with identical semantics (tested against each other):
   psum (the SLDU); VST/VEXT reconcile replicated memory via psum (the VLSU —
   the only all-lane units, exactly the paper's scalability argument).
 
+Multi-precision (§III-E4): both engines honor VSETVL's SEW. Registers are
+fixed-size byte slices, so VLMAX scales by 64/SEW; every arithmetic result
+is rounded to the SEW-wide float format before it lands in the register
+file (storage stays the engine dtype — value semantics, HW-width rounding).
+Widening ops (VFWMUL/VFWMA) round once into the 2·SEW format, modeling
+"multiply narrow, accumulate wide" mixed-precision FMAs.
+
 ``simulate_timing`` is an event-driven scoreboard (issue interval, per-unit
 occupancy, chaining lag) giving an instruction-accurate cycle estimate that
-cross-validates the closed-form core/perfmodel.py.
+cross-validates the closed-form core/perfmodel.py. FPU/SLDU occupancy
+scales as e / (64/SEW) — the datapath subdivides 64/SEW ways, reproducing
+the paper's 2×/4× throughput claim — and VLSU bursts move SEW/8-byte
+elements, so memory occupancy shrinks proportionally too.
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Optional
 
 import jax
@@ -25,9 +34,36 @@ import numpy as np
 
 from repro.configs.ara import AraConfig
 from repro.core import isa
+from repro.core.compat import shard_map
 from repro.core.perfmodel import C_MEM_LANE, L_MEM
+from repro.core.precision import SEW_TO_DTYPE
 
 CHAIN_LAG = 4.0   # cycles: consumer starts this far behind producer (chaining)
+
+MIN_SEW = min(isa.SEWS)
+
+# float format per element width; widening ops use _WIDE_DTYPE[sew]
+_SEW_DTYPE = {bits: jnp.dtype(name) for bits, name in SEW_TO_DTYPE.items()}
+
+
+def _wide_bits(sew: int) -> int:
+    if 2 * sew not in _SEW_DTYPE:
+        raise ValueError(
+            f"widening op illegal at SEW={sew} (2*SEW exceeds ELEN=64)")
+    return 2 * sew
+
+
+def _quantize(x, bits: int, storage):
+    """Round ``x`` through the bits-wide float format, back to storage.
+
+    Rounding to a format at least as wide as the value's is the identity —
+    skipped, which also avoids spurious x64-disabled truncation warnings
+    when storage is effectively float32.
+    """
+    dt = _SEW_DTYPE[bits]
+    if dt.itemsize >= jnp.dtype(x.dtype).itemsize:
+        return x
+    return x.astype(dt).astype(storage)
 
 
 # ---------------------------------------------------------------------------
@@ -39,45 +75,78 @@ class ReferenceEngine:
     def __init__(self, cfg: AraConfig, vlmax: Optional[int] = None,
                  dtype=jnp.float64):
         self.cfg = cfg
-        self.vlmax = vlmax or cfg.vlmax_dp
+        self.vlmax64 = vlmax or cfg.vlmax_dp
         self.dtype = dtype
+
+    # Back-compat alias: the 64-bit VLMAX the engine was sized for.
+    @property
+    def vlmax(self) -> int:
+        return self.vlmax64
+
+    def vlmax_for(self, sew: int) -> int:
+        return self.vlmax64 * (64 // sew)
 
     def run(self, program, memory, sregs: Optional[dict] = None):
         mem = jnp.asarray(memory, self.dtype)
-        v = jnp.zeros((isa.NUM_VREGS, self.vlmax), self.dtype)
+        n_elems = self.vlmax_for(MIN_SEW)
+        v = jnp.zeros((isa.NUM_VREGS, n_elems), self.dtype)
         s = dict(sregs or {})
-        vl = self.vlmax
+        vl, sew = self.vlmax64, 64
+
+        def q(x, bits):
+            # HW-width rounding; storage stays the engine dtype
+            return _quantize(x, bits, self.dtype)
+
         for ins in program:
             t = type(ins)
             if t is isa.VSETVL:
-                vl = min(ins.vl, self.vlmax)
+                if ins.sew not in isa.SEWS:
+                    raise ValueError(f"unsupported SEW {ins.sew}")
+                sew = ins.sew
+                vl = min(ins.vl, self.vlmax_for(sew))
             elif t is isa.VLD:
                 v = v.at[ins.vd, :vl].set(
-                    jax.lax.dynamic_slice(mem, (ins.addr,), (vl,)))
+                    q(jax.lax.dynamic_slice(mem, (ins.addr,), (vl,)), sew))
             elif t is isa.VLDS:
                 idx = ins.addr + ins.stride * jnp.arange(vl)
-                v = v.at[ins.vd, :vl].set(mem[idx])
+                v = v.at[ins.vd, :vl].set(q(mem[idx], sew))
             elif t is isa.VGATHER:
+                # clamp like LaneEngine (and the test oracle): OOB indexed
+                # loads are UB in HW; the model pins them to the edges
                 idx = ins.addr + v[ins.vidx, :vl].astype(jnp.int32)
-                v = v.at[ins.vd, :vl].set(mem[idx])
+                idx = jnp.clip(idx, 0, mem.shape[0] - 1)
+                v = v.at[ins.vd, :vl].set(q(mem[idx], sew))
             elif t is isa.VST:
                 mem = jax.lax.dynamic_update_slice(mem, v[ins.vs, :vl],
                                                    (ins.addr,))
             elif t is isa.VFMA:
                 v = v.at[ins.vd, :vl].set(
-                    v[ins.va, :vl] * v[ins.vb, :vl] + v[ins.vd, :vl])
+                    q(v[ins.va, :vl] * v[ins.vb, :vl] + v[ins.vd, :vl], sew))
             elif t is isa.VFMA_VS:
                 v = v.at[ins.vd, :vl].set(
-                    s[ins.vs_scalar] * v[ins.vb, :vl] + v[ins.vd, :vl])
+                    q(s[ins.vs_scalar] * v[ins.vb, :vl] + v[ins.vd, :vl],
+                      sew))
             elif t is isa.VFADD:
-                v = v.at[ins.vd, :vl].set(v[ins.va, :vl] + v[ins.vb, :vl])
+                v = v.at[ins.vd, :vl].set(
+                    q(v[ins.va, :vl] + v[ins.vb, :vl], sew))
             elif t is isa.VFMUL:
-                v = v.at[ins.vd, :vl].set(v[ins.va, :vl] * v[ins.vb, :vl])
+                v = v.at[ins.vd, :vl].set(
+                    q(v[ins.va, :vl] * v[ins.vb, :vl], sew))
+            elif t is isa.VFWMUL:
+                v = v.at[ins.vd, :vl].set(
+                    q(v[ins.va, :vl] * v[ins.vb, :vl], _wide_bits(sew)))
+            elif t is isa.VFWMA:
+                v = v.at[ins.vd, :vl].set(
+                    q(v[ins.va, :vl] * v[ins.vb, :vl] + v[ins.vd, :vl],
+                      _wide_bits(sew)))
+            elif t is isa.VFNCVT:
+                v = v.at[ins.vd, :vl].set(q(v[ins.vs, :vl], sew))
             elif t is isa.VADD:
-                v = v.at[ins.vd, :vl].set(v[ins.va, :vl] + v[ins.vb, :vl])
+                v = v.at[ins.vd, :vl].set(
+                    q(v[ins.va, :vl] + v[ins.vb, :vl], sew))
             elif t is isa.VINS:
-                v = v.at[ins.vd, :vl].set(jnp.full((vl,), s[ins.scalar],
-                                                   self.dtype))
+                v = v.at[ins.vd, :vl].set(
+                    q(jnp.full((vl,), s[ins.scalar], self.dtype), sew))
             elif t is isa.VEXT:
                 s[ins.sd] = v[ins.vs, ins.idx]
             elif t is isa.VSLIDE:
@@ -113,12 +182,19 @@ class LaneEngine:
         self.axis = axis
         self.lanes = mesh.shape[axis]
         vlmax = vlmax or cfg.vlmax_dp
-        self.vlmax = (vlmax // self.lanes) * self.lanes
+        self.vlmax64 = (vlmax // self.lanes) * self.lanes
         self.dtype = dtype
+
+    @property
+    def vlmax(self) -> int:
+        return self.vlmax64
+
+    def vlmax_for(self, sew: int) -> int:
+        return self.vlmax64 * (64 // sew)
 
     def run(self, program, memory, sregs: Optional[dict] = None):
         lanes = self.lanes
-        e_max = self.vlmax // lanes
+        e_max = self.vlmax_for(MIN_SEW) // lanes
         program = tuple(program)
         sregs = dict(sregs or {})
         n_s = 32                              # fixed scalar register file
@@ -130,10 +206,10 @@ class LaneEngine:
             lane = jax.lax.axis_index(self.axis)
             v = jnp.zeros((isa.NUM_VREGS, e_max), self.dtype)
             s = svec.astype(self.dtype)
-            vl = self.vlmax
+            vl, sew = self.vlmax64, 64
 
-            def lvl(vl):   # local element count on this lane
-                return -(-vl // lanes)  # ceil; masked via element index
+            def q(x, bits):
+                return _quantize(x, bits, self.dtype)
 
             def owned_mask(vl):
                 # element ids owned by this lane: lane + k*lanes < vl
@@ -143,14 +219,25 @@ class LaneEngine:
             for ins in program:
                 t = type(ins)
                 if t is isa.VSETVL:
-                    vl = min(ins.vl, self.vlmax)
+                    if ins.sew not in isa.SEWS:
+                        raise ValueError(f"unsupported SEW {ins.sew}")
+                    sew = ins.sew
+                    vl = min(ins.vl, self.vlmax_for(sew))
                 elif t is isa.VLD:
                     mask, ids = owned_mask(vl)
-                    vals = mem[ins.addr + ids * (ids < vl)]
+                    vals = q(mem[ins.addr + ids * (ids < vl)], sew)
                     v = v.at[ins.vd].set(jnp.where(mask, vals, 0))
                 elif t is isa.VLDS:
                     mask, ids = owned_mask(vl)
-                    vals = mem[ins.addr + ins.stride * ids * (ids < vl)]
+                    vals = q(mem[ins.addr + ins.stride * ids * (ids < vl)],
+                             sew)
+                    v = v.at[ins.vd].set(jnp.where(mask, vals, 0))
+                elif t is isa.VGATHER:
+                    mask, ids = owned_mask(vl)
+                    gidx = ins.addr + v[ins.vidx].astype(jnp.int32)
+                    gidx = jnp.clip(jnp.where(mask, gidx, 0), 0,
+                                    mem.shape[0] - 1)
+                    vals = q(mem[gidx], sew)
                     v = v.at[ins.vd].set(jnp.where(mask, vals, 0))
                 elif t is isa.VST:
                     mask, ids = owned_mask(vl)
@@ -165,19 +252,30 @@ class LaneEngine:
                     cnt = jax.lax.psum(cnt, self.axis)
                     mem = jnp.where(cnt > 0, upd, mem)
                 elif t is isa.VFMA:
-                    v = v.at[ins.vd].set(v[ins.va] * v[ins.vb] + v[ins.vd])
+                    v = v.at[ins.vd].set(
+                        q(v[ins.va] * v[ins.vb] + v[ins.vd], sew))
                 elif t is isa.VFMA_VS:
-                    v = v.at[ins.vd].set(s[ins.vs_scalar] * v[ins.vb]
-                                         + v[ins.vd])
+                    v = v.at[ins.vd].set(
+                        q(s[ins.vs_scalar] * v[ins.vb] + v[ins.vd], sew))
                 elif t is isa.VFADD:
-                    v = v.at[ins.vd].set(v[ins.va] + v[ins.vb])
+                    v = v.at[ins.vd].set(q(v[ins.va] + v[ins.vb], sew))
                 elif t is isa.VFMUL:
-                    v = v.at[ins.vd].set(v[ins.va] * v[ins.vb])
+                    v = v.at[ins.vd].set(q(v[ins.va] * v[ins.vb], sew))
+                elif t is isa.VFWMUL:
+                    v = v.at[ins.vd].set(
+                        q(v[ins.va] * v[ins.vb], _wide_bits(sew)))
+                elif t is isa.VFWMA:
+                    v = v.at[ins.vd].set(
+                        q(v[ins.va] * v[ins.vb] + v[ins.vd],
+                          _wide_bits(sew)))
+                elif t is isa.VFNCVT:
+                    v = v.at[ins.vd].set(q(v[ins.vs], sew))
                 elif t is isa.VADD:
-                    v = v.at[ins.vd].set(v[ins.va] + v[ins.vb])
+                    v = v.at[ins.vd].set(q(v[ins.va] + v[ins.vb], sew))
                 elif t is isa.VINS:
-                    v = v.at[ins.vd].set(jnp.full((e_max,), s[ins.scalar],
-                                                  self.dtype))
+                    v = v.at[ins.vd].set(
+                        q(jnp.full((e_max,), s[ins.scalar], self.dtype),
+                          sew))
                 elif t is isa.VEXT:
                     mask, ids = owned_mask(vl)
                     hit = (ids == ins.idx) & mask
@@ -207,9 +305,9 @@ class LaneEngine:
             return mem, s
 
         from jax.sharding import PartitionSpec as PS
-        fn = jax.shard_map(device_fn, mesh=self.mesh,
-                           in_specs=(PS(), PS()), out_specs=(PS(), PS()),
-                           check_vma=False)
+        fn = shard_map(device_fn, mesh=self.mesh,
+                       in_specs=(PS(), PS()), out_specs=(PS(), PS()),
+                       check_vma=False)
         mem, s = fn(jnp.asarray(memory, self.dtype), jnp.asarray(s0))
         return np.asarray(mem), {k: np.asarray(s)[k] for k in range(n_s)}
 
@@ -232,14 +330,17 @@ class TimingReport:
 ISSUE_COST = {  # Ariane dispatch slots per instruction (Appendix A)
     isa.VSETVL: 1, isa.VLD: 2, isa.VLDS: 2, isa.VGATHER: 2, isa.VST: 2,
     isa.VFMA: 1, isa.VFMA_VS: 1, isa.VFADD: 1, isa.VFMUL: 1, isa.VADD: 1,
+    isa.VFWMUL: 1, isa.VFWMA: 1, isa.VFNCVT: 1,
     isa.VINS: 1, isa.VEXT: 1, isa.VSLIDE: 1, isa.LDSCALAR: 3,
 }
+
+_WIDENING = (isa.VFWMUL, isa.VFWMA)
 
 
 def simulate_timing(program, cfg: AraConfig,
                     vlmax: Optional[int] = None) -> TimingReport:
     lanes = cfg.lanes
-    vlmax = vlmax or cfg.vlmax_dp
+    vlmax64 = vlmax or cfg.vlmax_dp
     bw = cfg.mem_bytes_per_cycle
     issue_t = 0.0
     unit_free = {"fpu": 0.0, "alu": 0.0, "sldu": 0.0, "vlsu": 0.0,
@@ -248,21 +349,19 @@ def simulate_timing(program, cfg: AraConfig,
     reg_start = {}          # vreg -> exec start (chaining reference)
     reg_end = {}
     sreg_end = {}
-    vl = vlmax
+    vl, sew = vlmax64, 64
 
     def vdeps(ins):
         t = type(ins)
-        if t in (isa.VFMA,):
+        if t in (isa.VFMA, isa.VFWMA):
             return [ins.va, ins.vb, ins.vd]
         if t is isa.VFMA_VS:
             return [ins.vb, ins.vd]
-        if t in (isa.VFADD, isa.VFMUL, isa.VADD):
+        if t in (isa.VFADD, isa.VFMUL, isa.VADD, isa.VFWMUL):
             return [ins.va, ins.vb]
         if t is isa.VST:
             return [ins.vs]
-        if t is isa.VSLIDE:
-            return [ins.vs]
-        if t is isa.VEXT:
+        if t in (isa.VSLIDE, isa.VEXT, isa.VFNCVT):
             return [ins.vs]
         if t is isa.VGATHER:
             return [ins.vidx]
@@ -278,23 +377,35 @@ def simulate_timing(program, cfg: AraConfig,
         t = type(ins)
         issue_t += ISSUE_COST.get(t, 1)
         if t is isa.VSETVL:
-            vl = min(ins.vl, vlmax)
+            if ins.sew not in isa.SEWS:
+                raise ValueError(f"unsupported SEW {ins.sew}")
+            sew = ins.sew
+            vl = min(ins.vl, vlmax64 * (64 // sew))
             continue
         e = max(vl / lanes, 1.0)
+        # the 64-bit datapath subdivides 64/SEW ways (§III-E4): FPU and
+        # SLDU retire ways elements/lane/cycle; widening ops produce
+        # 2*SEW-wide results so they run at the wide width's rate
+        if t in _WIDENING and sew == 64:
+            raise ValueError(
+                "widening op illegal at SEW=64 (2*SEW exceeds ELEN=64)")
+        ways = 64 // sew
+        ways_w = max(ways // 2, 1)
         # (occupancy, latency): back-to-back bursts pipeline at occupancy
         # rate; startup/collection latency delays only dependants
         if t in (isa.VLD, isa.VLDS, isa.VGATHER, isa.VST):
-            occ = 8.0 * vl / bw
+            occ = (sew / 8.0) * vl / bw
             if t in (isa.VLDS, isa.VGATHER):
                 occ = float(vl)           # element-granular, no burst
             unit, lat = "vlsu", occ + L_MEM + C_MEM_LANE * lanes
         elif t is isa.LDSCALAR:
             unit, occ, lat = "scalar", 1.0, 2.0
         elif t in (isa.VINS, isa.VEXT, isa.VSLIDE):
-            unit, occ = "sldu", e + (lanes / 8.0)
+            unit, occ = "sldu", e / ways + (lanes / 8.0)
             lat = occ
         else:
-            unit, occ = "fpu", e
+            unit = "fpu"
+            occ = e / (ways_w if t in _WIDENING else ways)
             lat = occ + CHAIN_LAG
         dep_start = 0.0
         for r in vdeps(ins):

@@ -34,9 +34,15 @@ def _conv_kernel(x_ref, w_ref, o_ref, *, kh: int, kw: int, w_out: int):
     o_ref[0, 0, :] = acc.astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
-def conv2d_direct(x, w, *, interpret: bool = False):
-    """x (C, H, W) [pre-padded]; w (OC, C, KH, KW) -> (OC, H_out, W_out)."""
+@functools.partial(jax.jit, static_argnames=("interpret", "out_dtype"))
+def conv2d_direct(x, w, *, interpret: bool = False, out_dtype=None):
+    """x (C, H, W) [pre-padded]; w (OC, C, KH, KW) -> (OC, H_out, W_out).
+
+    Accumulation is fp32 in-kernel whatever the input width, so bf16/f16
+    inputs are the Ara 2x32/4x16 datapath-split path; ``out_dtype``
+    (default: x's dtype) picks the final narrowing.
+    """
+    out_dtype = x.dtype if out_dtype is None else out_dtype
     c, h, wid = x.shape
     oc, c2, kh, kw = w.shape
     assert c == c2
@@ -49,6 +55,6 @@ def conv2d_direct(x, w, *, interpret: bool = False):
             pl.BlockSpec((1, c, kh, kw), lambda o, r: (o, 0, 0, 0)),
         ],
         out_specs=pl.BlockSpec((1, 1, w_out), lambda o, r: (o, r, 0)),
-        out_shape=jax.ShapeDtypeStruct((oc, h_out, w_out), x.dtype),
+        out_shape=jax.ShapeDtypeStruct((oc, h_out, w_out), out_dtype),
         interpret=interpret,
     )(x, w)

@@ -35,10 +35,18 @@ def _matmul_kernel(a_ref, b_ref, o_ref, acc_ref, *, n_k: int):
         o_ref[...] = acc_ref[...].astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret",
+                                             "out_dtype"))
 def matmul(a, b, *, bm: int = 128, bn: int = 128, bk: int = 128,
-           interpret: bool = False):
-    """a (M,K) @ b (K,N) -> (M,N) in a's dtype, fp32 accumulation."""
+           interpret: bool = False, out_dtype=None):
+    """a (M,K) @ b (K,N) -> (M,N), fp32 accumulation.
+
+    Multi-precision path (§III-E4 analogue): feed bf16/f16 inputs for the
+    MXU's doubled rate; the VMEM accumulator stays fp32 regardless, and
+    ``out_dtype`` (default: a's dtype) picks the final narrowing — i.e.
+    Ara's VFWMA + VFNCVT pair expressed as one kernel.
+    """
+    out_dtype = a.dtype if out_dtype is None else out_dtype
     m, k = a.shape
     k2, n = b.shape
     assert k == k2, (a.shape, b.shape)
@@ -54,7 +62,7 @@ def matmul(a, b, *, bm: int = 128, bn: int = 128, bk: int = 128,
             pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((m, n), a.dtype),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
         interpret=interpret,
     )(a, b)

@@ -3,11 +3,19 @@
 ``interpret`` defaults to True off-TPU (this container is CPU-only; the
 kernel body then runs as the Pallas interpreter, validating semantics) and
 False on TPU where the compiled kernel is the fast path.
+
+Multi-precision: every wrapper takes ``policy`` (core.precision.Policy) —
+inputs are cast to ``policy.compute_dtype`` before the kernel, so bf16/f16
+compute with fp32 in-kernel accumulation is one kwarg away. This is the
+same Policy the analytical perf model consults, keeping the TPU kernels
+and the Ara datapath-split model on one source of per-precision truth.
 """
 from __future__ import annotations
 
 import jax
+import jax.numpy as jnp
 
+from repro.core.precision import Policy
 from repro.kernels.attention import flash_attention as _flash
 from repro.kernels.axpy import axpy as _axpy
 from repro.kernels.conv import conv2d_direct as _conv
@@ -19,23 +27,34 @@ def _default_interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
-def matmul(a, b, **kw):
+def _cast(policy, *arrays):
+    if policy is None:
+        return arrays
+    dt = jnp.dtype(policy.compute_dtype)
+    return tuple(a.astype(dt) for a in arrays)
+
+
+def matmul(a, b, *, policy: Policy | None = None, **kw):
     kw.setdefault("interpret", _default_interpret())
+    a, b = _cast(policy, a, b)
     return _matmul(a, b, **kw)
 
 
-def axpy(alpha, x, y, **kw):
+def axpy(alpha, x, y, *, policy: Policy | None = None, **kw):
     kw.setdefault("interpret", _default_interpret())
+    x, y = _cast(policy, x, y)
     return _axpy(alpha, x, y, **kw)
 
 
-def conv2d(x, w, **kw):
+def conv2d(x, w, *, policy: Policy | None = None, **kw):
     kw.setdefault("interpret", _default_interpret())
+    x, w = _cast(policy, x, w)
     return _conv(x, w, **kw)
 
 
-def flash_attention(q, k, v, **kw):
+def flash_attention(q, k, v, *, policy: Policy | None = None, **kw):
     kw.setdefault("interpret", _default_interpret())
+    q, k, v = _cast(policy, q, k, v)
     return _flash(q, k, v, **kw)
 
 

@@ -16,6 +16,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
+from repro.core.compat import shard_map
 from repro.models.layers import (P, apply_rope, repeat_kv, rms_norm,
                                  rotary_embedding)
 
@@ -314,7 +315,7 @@ def mla_chunked(cfg, q_nope, q_rope, c_kv, k_rope, wkv_b, q_pos, kv_valid,
     from jax.sharding import PartitionSpec as PS
     b_axes = tuple(ctx.batch_axes)
     fn = functools.partial(_mla_chunked, cfg, chunk=chunk)
-    return jax.shard_map(
+    return shard_map(
         fn, mesh=ctx.mesh,
         in_specs=(PS(b_axes, None, ctx.model_axis, None),   # q_nope
                   PS(b_axes, None, ctx.model_axis, None),   # q_rope

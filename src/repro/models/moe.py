@@ -26,6 +26,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as PS
 
 from repro.configs.base import ArchConfig
+from repro.core.compat import shard_map
 from repro.models.layers import P, activation_fn
 from repro.models.sharding import MeshCtx
 
@@ -212,7 +213,7 @@ def moe_ep_shard_map(cfg: ArchConfig, p: dict, x_tokens, ctx: MeshCtx):
     # is not duplicated; divisibility is guaranteed by moe_block's guard.
     fn = functools.partial(_ep_device_fn, cfg, n_lanes, ctx.model_axis,
                            all_axes)
-    y, aux = jax.shard_map(
+    y, aux = shard_map(
         fn, mesh=mesh,
         in_specs=(PS(all_axes, None), PS(None, None),
                   PS(ctx.model_axis, None, None), PS(ctx.model_axis, None, None),

@@ -1,0 +1,168 @@
+"""Minimal stand-in for ``hypothesis`` when it is not installed.
+
+The container this repo targets does not ship ``hypothesis`` and installing
+packages is off-limits, so the test suite must degrade gracefully: real
+hypothesis when available (CI pins it), otherwise this shim. It implements
+the tiny subset the tests use — ``given``, ``settings`` and the strategies
+``integers``, ``floats``, ``booleans``, ``sampled_from``, ``lists`` — as a
+deterministic pseudo-random example generator (seeded per test name, so
+failures reproduce). It does NOT shrink, track coverage, or persist a
+database; it is a property-*runner*, not a property-*explorer*.
+
+Usage (from conftest.py, before test modules import)::
+
+    try:
+        import hypothesis
+    except ModuleNotFoundError:
+        from repro.testing import hypofallback
+        hypofallback.install()
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import sys
+import types
+import zlib
+
+import numpy as np
+
+DEFAULT_MAX_EXAMPLES = 20   # hypothesis defaults to 100; keep CPU time sane
+
+
+class _Strategy:
+    """A strategy is just a sampler: ``draw(rng) -> value``."""
+
+    def __init__(self, draw):
+        self._draw = draw
+
+    def draw(self, rng):
+        return self._draw(rng)
+
+    def map(self, fn):
+        return _Strategy(lambda rng: fn(self._draw(rng)))
+
+    def filter(self, pred, _tries: int = 100):
+        def draw(rng):
+            for _ in range(_tries):
+                v = self._draw(rng)
+                if pred(v):
+                    return v
+            raise ValueError("filter predicate never satisfied")
+        return _Strategy(draw)
+
+
+def integers(min_value: int = -(2 ** 31), max_value: int = 2 ** 31 - 1):
+    return _Strategy(
+        lambda rng: int(rng.randint(min_value, max_value + 1)))
+
+
+def floats(min_value: float = -1e9, max_value: float = 1e9,
+           allow_nan: bool = False, allow_infinity: bool = False,
+           width: int = 64):
+    return _Strategy(
+        lambda rng: float(rng.uniform(min_value, max_value)))
+
+
+def booleans():
+    return _Strategy(lambda rng: bool(rng.randint(0, 2)))
+
+
+def sampled_from(elements):
+    seq = list(elements)
+    return _Strategy(lambda rng: seq[rng.randint(len(seq))])
+
+
+def lists(elements: _Strategy, min_size: int = 0, max_size: int = 10):
+    def draw(rng):
+        n = int(rng.randint(min_size, max_size + 1))
+        return [elements.draw(rng) for _ in range(n)]
+    return _Strategy(draw)
+
+
+def tuples(*strategies):
+    return _Strategy(lambda rng: tuple(s.draw(rng) for s in strategies))
+
+
+def just(value):
+    return _Strategy(lambda rng: value)
+
+
+def one_of(*strategies):
+    seq = list(strategies)
+    return _Strategy(lambda rng: seq[rng.randint(len(seq))].draw(rng))
+
+
+def composite(fn):
+    """``@st.composite`` — fn(draw, *args) with draw(strategy) -> value."""
+    def build(*args, **kwargs):
+        def draw_fn(rng):
+            return fn(lambda strat: strat.draw(rng), *args, **kwargs)
+        return _Strategy(draw_fn)
+    return build
+
+
+def settings(max_examples: int = DEFAULT_MAX_EXAMPLES, deadline=None,
+             **_ignored):
+    """Decorator recording max_examples; order-independent wrt @given."""
+    def deco(fn):
+        fn._hypofallback_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*arg_strategies, **kw_strategies):
+    if arg_strategies:
+        raise TypeError("hypofallback supports keyword strategies only "
+                        "(given(x=st...)); rewrite positional @given")
+
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_hypofallback_max_examples",
+                        getattr(fn, "_hypofallback_max_examples",
+                                DEFAULT_MAX_EXAMPLES))
+            seed = zlib.crc32(fn.__qualname__.encode()) & 0x7FFFFFFF
+            rng = np.random.RandomState(seed)
+            for i in range(n):
+                drawn = {k: s.draw(rng) for k, s in kw_strategies.items()}
+                try:
+                    fn(*args, **drawn, **kwargs)
+                except Exception as e:
+                    raise AssertionError(
+                        f"hypofallback: falsifying example #{i + 1} "
+                        f"(seed {seed}): {drawn!r}") from e
+
+        # Hide the strategy-drawn parameters from pytest's fixture
+        # resolution (real hypothesis does the same via its plugin).
+        sig = inspect.signature(fn)
+        params = [p for name, p in sig.parameters.items()
+                  if name not in kw_strategies]
+        wrapper.__signature__ = sig.replace(parameters=params)
+        del wrapper.__wrapped__    # or inspect follows it past __signature__
+        return wrapper
+    return deco
+
+
+class HealthCheck:
+    """No-op stand-ins for suppress_health_check=[...]."""
+    too_slow = data_too_large = filter_too_much = all = None
+
+
+def install():
+    """Register this module as ``hypothesis`` in sys.modules."""
+    if "hypothesis" in sys.modules:
+        return
+    mod = types.ModuleType("hypothesis")
+    mod.given = given
+    mod.settings = settings
+    mod.HealthCheck = HealthCheck
+    mod.__is_hypofallback__ = True
+
+    st_mod = types.ModuleType("hypothesis.strategies")
+    for name in ("integers", "floats", "booleans", "sampled_from", "lists",
+                 "tuples", "just", "one_of", "composite"):
+        setattr(st_mod, name, globals()[name])
+    mod.strategies = st_mod
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = st_mod

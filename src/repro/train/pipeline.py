@@ -24,6 +24,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as PS
 
+from repro.core.compat import shard_map
+
 
 def bubble_fraction(n_stages: int, n_micro: int) -> float:
     return (n_stages - 1) / (n_micro + n_stages - 1)
@@ -80,8 +82,8 @@ def pipeline_apply(stage_fn: Callable, stage_params, x_micro, mesh,
 
     in_specs = (jax.tree_util.tree_map(lambda _: PS(axis), stage_params),
                 PS())
-    return jax.shard_map(device_fn, mesh=mesh, in_specs=in_specs,
-                         out_specs=PS(), check_vma=False)(
+    return shard_map(device_fn, mesh=mesh, in_specs=in_specs,
+                     out_specs=PS(), check_vma=False)(
         stage_params, x_micro)
 
 

@@ -1,0 +1,412 @@
+"""Multi-precision (SEW) tests, §III-E4.
+
+Three-way differential: random ISA programs at SEW ∈ {64, 32, 16} through
+ReferenceEngine vs an independent numpy oracle (in-process), and
+ReferenceEngine vs LaneEngine (subprocess: needs fake devices) — plus
+scoreboard/perfmodel assertions that halving SEW ≈ doubles FLOP/cycle on
+FPU-bound programs, and Pallas bf16/f16 kernel paths vs the fp32 path.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.ara import AraConfig
+from repro.core import isa
+from repro.core import perfmodel as pm
+from repro.core import precision
+from repro.core.vector_engine import ReferenceEngine, simulate_timing
+from repro.kernels import ops
+from conftest import run_devices
+
+SEW_NP = {64: np.float64, 32: np.float32, 16: np.float16}
+
+
+# ---------------------------------------------------------------------------
+# numpy oracle: an independent, dead-simple executor of the ISA semantics
+# ---------------------------------------------------------------------------
+
+
+def numpy_oracle(program, memory, vlmax64, sregs=None, storage=np.float32):
+    mem = np.asarray(memory, storage).copy()
+    n_elems = vlmax64 * (64 // min(isa.SEWS))
+    v = np.zeros((isa.NUM_VREGS, n_elems), storage)
+    s = dict(sregs or {})
+    vl, sew = vlmax64, 64
+
+    def q(x, bits):
+        dt = np.dtype(SEW_NP[bits])
+        if dt.itemsize >= np.dtype(storage).itemsize:
+            return np.asarray(x, storage)
+        return np.asarray(x).astype(dt).astype(storage)
+
+    for ins in program:
+        t = type(ins)
+        if t is isa.VSETVL:
+            sew = ins.sew
+            vl = min(ins.vl, vlmax64 * (64 // sew))
+        elif t is isa.VLD:
+            v[ins.vd, :vl] = q(mem[ins.addr:ins.addr + vl], sew)
+        elif t is isa.VLDS:
+            idx = ins.addr + ins.stride * np.arange(vl)
+            v[ins.vd, :vl] = q(mem[idx], sew)
+        elif t is isa.VGATHER:
+            idx = ins.addr + v[ins.vidx, :vl].astype(np.int32)
+            idx = np.clip(idx, 0, mem.shape[0] - 1)
+            v[ins.vd, :vl] = q(mem[idx], sew)
+        elif t is isa.VST:
+            mem[ins.addr:ins.addr + vl] = v[ins.vs, :vl]
+        elif t is isa.VFMA:
+            v[ins.vd, :vl] = q(v[ins.va, :vl] * v[ins.vb, :vl]
+                               + v[ins.vd, :vl], sew)
+        elif t is isa.VFMA_VS:
+            v[ins.vd, :vl] = q(storage(s[ins.vs_scalar]) * v[ins.vb, :vl]
+                               + v[ins.vd, :vl], sew)
+        elif t is isa.VFADD:
+            v[ins.vd, :vl] = q(v[ins.va, :vl] + v[ins.vb, :vl], sew)
+        elif t is isa.VFMUL:
+            v[ins.vd, :vl] = q(v[ins.va, :vl] * v[ins.vb, :vl], sew)
+        elif t is isa.VFWMUL:
+            v[ins.vd, :vl] = q(v[ins.va, :vl] * v[ins.vb, :vl], 2 * sew)
+        elif t is isa.VFWMA:
+            v[ins.vd, :vl] = q(v[ins.va, :vl] * v[ins.vb, :vl]
+                               + v[ins.vd, :vl], 2 * sew)
+        elif t is isa.VFNCVT:
+            v[ins.vd, :vl] = q(v[ins.vs, :vl], sew)
+        elif t is isa.VADD:
+            v[ins.vd, :vl] = q(v[ins.va, :vl] + v[ins.vb, :vl], sew)
+        elif t is isa.VINS:
+            v[ins.vd, :vl] = q(np.full(vl, s[ins.scalar], storage), sew)
+        elif t is isa.VEXT:
+            s[ins.sd] = v[ins.vs, ins.idx]
+        elif t is isa.VSLIDE:
+            out = np.zeros(vl, storage)
+            out[:vl - ins.amount] = v[ins.vs, ins.amount:vl]
+            v[ins.vd, :vl] = out
+        elif t is isa.LDSCALAR:
+            s[ins.sd] = mem[ins.addr]
+        else:
+            raise ValueError(ins)
+    return mem, s
+
+
+# ---------------------------------------------------------------------------
+# random program generator (index-safe by construction)
+# ---------------------------------------------------------------------------
+
+MEM_WORDS = 256
+IDX_REG = 30      # register pre-loaded with small integers, for VGATHER
+
+
+def random_program(r: np.random.RandomState, sew: int, n_ops: int = 14):
+    vl = int(r.randint(4, 33))
+    mem = r.uniform(-1, 1, MEM_WORDS)
+    mem[:40] = r.randint(0, 8, 40)      # integer-exact region for gathers
+    sregs = {0: float(np.float32(r.uniform(-2, 2)))}
+    prog = [isa.VSETVL(vl, sew), isa.VLD(IDX_REG, 0)]
+    for vr in range(1, 5):              # seed a few live registers
+        prog.append(isa.VLD(vr, int(r.randint(40, MEM_WORDS - vl))))
+    pool = ["vfma", "vfma_vs", "vfadd", "vfmul", "vadd", "vins", "vld",
+            "vlds", "vgather", "vst", "vslide", "vext", "ldscalar"]
+    if sew < 64:
+        pool += ["vfwmul", "vfwma", "vfncvt"]
+    regs = lambda: int(r.randint(1, 9))
+    for _ in range(n_ops):
+        op = pool[r.randint(len(pool))]
+        if op == "vfma":
+            prog.append(isa.VFMA(regs(), regs(), regs()))
+        elif op == "vfma_vs":
+            prog.append(isa.VFMA_VS(regs(), 0, regs()))
+        elif op == "vfadd":
+            prog.append(isa.VFADD(regs(), regs(), regs()))
+        elif op == "vfmul":
+            prog.append(isa.VFMUL(regs(), regs(), regs()))
+        elif op == "vadd":
+            prog.append(isa.VADD(regs(), regs(), regs()))
+        elif op == "vins":
+            prog.append(isa.VINS(regs(), 0))
+        elif op == "vld":
+            prog.append(isa.VLD(regs(), int(r.randint(40, MEM_WORDS - vl))))
+        elif op == "vlds":
+            stride = int(r.randint(1, 4))
+            hi = MEM_WORDS - stride * (vl - 1) - 1
+            prog.append(isa.VLDS(regs(), int(r.randint(40, hi)), stride))
+        elif op == "vgather":
+            # idx values come from the integer-exact region (0..7)
+            prog.append(isa.VGATHER(regs(), int(r.randint(0, MEM_WORDS - 8)),
+                                    IDX_REG))
+        elif op == "vst":
+            # keep the gather-index region pristine
+            prog.append(isa.VST(regs(), int(r.randint(40, MEM_WORDS - vl))))
+        elif op == "vslide":
+            prog.append(isa.VSLIDE(regs(), regs(), int(r.randint(0, vl))))
+        elif op == "vext":
+            prog.append(isa.VEXT(int(r.randint(1, 4)), regs(),
+                                 int(r.randint(0, vl))))
+        elif op == "ldscalar":
+            prog.append(isa.LDSCALAR(0, int(r.randint(0, MEM_WORDS))))
+        elif op == "vfwmul":
+            prog.append(isa.VFWMUL(regs(), regs(), regs()))
+        elif op == "vfwma":
+            prog.append(isa.VFWMA(regs(), regs(), regs()))
+        elif op == "vfncvt":
+            prog.append(isa.VFNCVT(regs(), regs()))
+    return prog, mem, sregs
+
+
+TOL = {64: 1e-5, 32: 1e-5, 16: 1e-2}   # storage is f32 in-process
+
+
+@settings(max_examples=15, deadline=None)
+@given(sew=st.sampled_from([64, 32, 16]), seed=st.integers(0, 9999))
+def test_random_program_reference_vs_numpy(sew, seed):
+    r = np.random.RandomState(seed)
+    prog, mem, sregs = random_program(r, sew)
+    cfg = AraConfig(lanes=2)
+    eng = ReferenceEngine(cfg, vlmax=64, dtype=jnp.float32)
+    got_mem, got_s = eng.run(prog, mem, sregs=dict(sregs))
+    want_mem, want_s = numpy_oracle(prog, mem, 64, sregs=dict(sregs),
+                                    storage=np.float32)
+    np.testing.assert_allclose(got_mem, want_mem, rtol=TOL[sew],
+                               atol=TOL[sew])
+    for k in want_s:
+        np.testing.assert_allclose(float(got_s[k]), float(want_s[k]),
+                                   rtol=TOL[sew], atol=TOL[sew])
+
+
+@pytest.mark.parametrize("sew", [32, 16])
+def test_widening_ops_semantics(sew):
+    """VFWMUL/VFWMA produce 2*SEW-rounded results; VFNCVT narrows back."""
+    cfg = AraConfig(lanes=2)
+    n = 8
+    r = np.random.RandomState(3)
+    mem = np.concatenate([r.uniform(-2, 2, 2 * n), np.zeros(2 * n)])
+    prog = [isa.VSETVL(n, sew),
+            isa.VLD(1, 0), isa.VLD(2, n),
+            isa.VFWMUL(3, 1, 2),           # wide product
+            isa.VFWMA(3, 1, 2),            # wide accumulate: 2*x*y
+            isa.VST(3, 2 * n),
+            isa.VFNCVT(4, 3),              # narrow back to SEW
+            isa.VST(4, 3 * n)]
+    out, _ = ReferenceEngine(cfg, vlmax=n, dtype=jnp.float32).run(prog, mem)
+    narrow, wide = SEW_NP[sew], SEW_NP[2 * sew]
+    x = mem[:n].astype(narrow).astype(np.float32)
+    y = mem[n:2 * n].astype(narrow).astype(np.float32)
+    want_wide = (2 * x * y).astype(wide) if 2 * sew < 32 else 2 * x * y
+    np.testing.assert_allclose(out[2 * n:3 * n], want_wide, rtol=1e-5,
+                               atol=1e-5)
+    np.testing.assert_allclose(out[3 * n:4 * n],
+                               np.asarray(want_wide).astype(narrow),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_widening_illegal_at_sew64():
+    cfg = AraConfig(lanes=2)
+    prog = [isa.VSETVL(8, 64), isa.VFWMUL(3, 1, 2)]
+    with pytest.raises(ValueError):
+        ReferenceEngine(cfg, vlmax=8).run(prog, np.zeros(16))
+    with pytest.raises(ValueError):      # scoreboard agrees it's illegal
+        simulate_timing(prog, cfg, vlmax=8)
+    with pytest.raises(ValueError):      # ... and rejects unknown SEWs
+        simulate_timing([isa.VSETVL(8, 8)], cfg, vlmax=8)
+
+
+def test_gather_oob_clamps_consistently():
+    """Out-of-range gather indices (UB in HW) clamp to the memory edges in
+    the engine and the oracle alike — the differential contract holds even
+    for index-unsafe programs."""
+    cfg = AraConfig(lanes=2)
+    mem = np.arange(16, dtype=float)
+    mem[0], mem[1] = -5.0, 200.0          # idx -> clamps to 0 and 15
+    prog = [isa.VSETVL(2, 64), isa.VLD(1, 0), isa.VGATHER(2, 0, 1),
+            isa.VST(2, 8)]
+    out, _ = ReferenceEngine(cfg, vlmax=2, dtype=jnp.float32).run(prog, mem)
+    want, _ = numpy_oracle(prog, mem, 2)
+    np.testing.assert_allclose(out, want)
+    np.testing.assert_allclose(out[8:10], [mem[0], mem[15]])
+
+
+def test_vlmax_scales_with_sew():
+    cfg = AraConfig(lanes=4)
+    assert cfg.vlmax(64) == cfg.vlmax_dp
+    assert cfg.vlmax(32) == 2 * cfg.vlmax_dp
+    assert cfg.vlmax(16) == 4 * cfg.vlmax_dp
+    # the engine honors it: a VSETVL beyond 64-bit VLMAX sticks at SEW=16
+    eng = ReferenceEngine(cfg, vlmax=32, dtype=jnp.float32)
+    n = 64                                  # 2x the 64-bit vlmax
+    mem = np.arange(2 * n, dtype=float)
+    prog = [isa.VSETVL(n, 16), isa.VLD(1, 0), isa.VST(1, n)]
+    out, _ = eng.run(prog, mem)
+    np.testing.assert_allclose(out[n:], np.arange(n).astype(np.float16),
+                               rtol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# cross-engine differential at every SEW (subprocess: fake devices)
+# ---------------------------------------------------------------------------
+
+
+def test_lane_engine_matches_reference_at_all_sews():
+    code = """
+import jax, numpy as np, jax.numpy as jnp
+from repro.configs.ara import AraConfig
+from repro.core import isa
+from repro.core.vector_engine import ReferenceEngine, LaneEngine
+cfg = AraConfig(lanes=4)
+mesh = jax.sharding.Mesh(np.array(jax.devices()[:4]), ("lanes",))
+ref = ReferenceEngine(cfg, vlmax=64)
+lane = LaneEngine(cfg, mesh, vlmax=64, dtype=jnp.float64)
+rng = np.random.RandomState(0)
+for sew in (64, 32, 16):
+    n = 32
+    mem = rng.uniform(-1, 1, 256)
+    mem[:40] = rng.randint(0, 8, 40)
+    prog = [isa.VSETVL(n, sew),
+            isa.VLD(30, 0),                     # gather indices (0..7)
+            isa.VLD(1, 40), isa.VLD(2, 80),
+            isa.VGATHER(3, 100, 30),            # indexed load
+            isa.VFMA(2, 1, 3),
+            isa.VFMUL(4, 2, 3)]
+    if sew < 64:
+        prog += [isa.VFWMUL(5, 1, 2), isa.VFWMA(5, 2, 3),
+                 isa.VFNCVT(6, 5), isa.VST(6, 200)]
+    prog += [isa.VST(2, 120), isa.VST(3, 160),
+             isa.VSLIDE(7, 2, 3), isa.VST(7, 44)]
+    o1, s1 = ref.run(prog, mem)
+    o2, s2 = lane.run(prog, mem)
+    d = np.abs(o1 - o2).max()
+    assert d < 1e-9, (sew, d)
+print("SEW_LANE_OK")
+"""
+    assert "SEW_LANE_OK" in run_devices(code, n_devices=4, x64=True)
+
+
+# ---------------------------------------------------------------------------
+# throughput: halving SEW ≈ doubles FLOP/cycle (scoreboard AND perfmodel)
+# ---------------------------------------------------------------------------
+
+
+def _fpu_bound_flop_per_cycle(sew, lanes=2, n=256):
+    cfg = AraConfig(lanes=lanes)
+    prog = isa.matmul_program(n, 0, n * n, 2 * n * n, t=4, vlmax=n, sew=sew)
+    tr = simulate_timing(prog, cfg, vlmax=n)
+    return tr.flop_per_cycle(2.0 * n ** 3)
+
+
+@pytest.mark.parametrize("sew,floor", [(32, 1.8), (16, 3.5)])
+def test_scoreboard_sew_speedup(sew, floor):
+    base = _fpu_bound_flop_per_cycle(64)
+    fast = _fpu_bound_flop_per_cycle(sew)
+    assert fast / base >= floor, (sew, fast / base)
+
+
+@pytest.mark.parametrize("sew,floor", [(32, 1.8), (16, 3.5)])
+def test_perfmodel_sew_speedup(sew, floor):
+    cfg = AraConfig(lanes=2)
+    base = pm.matmul_perf(cfg, 256, ew_bits=64).flop_per_cycle
+    fast = pm.matmul_perf(cfg, 256, ew_bits=sew).flop_per_cycle
+    assert fast / base >= floor, (sew, fast / base)
+
+
+@pytest.mark.parametrize("sew", [64, 32, 16])
+def test_utilization_against_per_precision_peak(sew):
+    """FLOP/cycle never exceeds the per-SEW peak, and the marquee 256-point
+    stays near it — the model agrees with AraConfig.peak_flop_per_cycle."""
+    cfg = AraConfig(lanes=2)
+    perf = pm.matmul_perf(cfg, 256, ew_bits=sew)
+    assert perf.peak_flop_per_cycle == cfg.peak_flop_per_cycle(sew)
+    assert 0.9 <= perf.utilization <= 1.0, (sew, perf.utilization)
+
+
+def test_peaks_single_source():
+    """AraConfig, KernelPerf and Policy all read the same table."""
+    cfg = AraConfig(lanes=4)
+    for sew, per_lane in precision.ARA_FLOP_PER_CYCLE_PER_LANE.items():
+        assert cfg.peak_flop_per_cycle(sew) == 4 * per_lane
+    pol = precision.Policy(compute_dtype="bfloat16")
+    assert pol.sew == 16
+    assert pol.ara_peak_flop_per_cycle(4) == cfg.peak_flop_per_cycle(16)
+    assert pol.ara_speedup() == 4.0
+    assert precision.Policy(compute_dtype="float32").ara_speedup() == 2.0
+
+
+def test_daxpy_model_scales_with_ew():
+    """DAXPY is memory-bound: narrower elements move fewer bytes."""
+    cfg = AraConfig(lanes=4)
+    c64 = pm.daxpy_cycles(cfg, 4096, ew_bits=64)
+    c32 = pm.daxpy_cycles(cfg, 4096, ew_bits=32)
+    assert 1.8 <= (c64 - 24) / (c32 - 24) <= 2.2
+
+
+def test_roofline_per_precision():
+    cfg = AraConfig(lanes=4)
+    # compute-bound region: peak doubles per halving
+    assert pm.matmul_roofline(cfg, 4096, ew_bits=32) == \
+        2 * pm.matmul_roofline(cfg, 4096, ew_bits=64)
+    # memory-bound region: intensity doubling cancels the peak doubling
+    assert pm.matmul_roofline(cfg, 8, ew_bits=32) == \
+        2 * pm.matmul_roofline(cfg, 8, ew_bits=64)
+
+
+# ---------------------------------------------------------------------------
+# Pallas kernels: bf16/f16 input paths vs the fp32 path (interpret mode)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("compute", ["bfloat16", "float16"])
+def test_pallas_matmul_low_precision_matches_fp32(compute, rng):
+    a = jnp.asarray(rng.randn(64, 48), jnp.float32)
+    b = jnp.asarray(rng.randn(48, 32), jnp.float32)
+    want = ops.matmul(a, b, bm=16, bn=16, bk=16, interpret=True)
+    pol = precision.Policy(compute_dtype=compute)
+    got = ops.matmul(a, b, policy=pol, out_dtype=jnp.float32,
+                     bm=16, bn=16, bk=16, interpret=True)
+    assert got.dtype == jnp.float32
+    # fp32-accumulation tolerance: error comes only from input rounding
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=3e-2, atol=0.5)
+
+
+def test_pallas_conv_bf16_matches_fp32(rng):
+    x = jnp.asarray(rng.randn(3, 12, 20), jnp.float32)
+    w = jnp.asarray(rng.randn(4, 3, 5, 5), jnp.float32) * 0.2
+    want = ops.conv2d(x, w, interpret=True)
+    pol = precision.Policy(compute_dtype="bfloat16")
+    got = ops.conv2d(x, w, policy=pol, out_dtype=jnp.float32,
+                     interpret=True)
+    assert got.dtype == jnp.float32
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=5e-2, atol=0.5)
+
+
+def test_pallas_attention_bf16_matches_fp32(rng):
+    q = jnp.asarray(rng.randn(1, 2, 32, 16), jnp.float32)
+    k = jnp.asarray(rng.randn(1, 2, 32, 16), jnp.float32)
+    v = jnp.asarray(rng.randn(1, 2, 32, 16), jnp.float32)
+    want = ops.flash_attention(q, k, v, causal=True, bq=16, bk=16,
+                               interpret=True)
+    pol = precision.Policy(compute_dtype="bfloat16")
+    got = ops.flash_attention(q, k, v, policy=pol, causal=True, bq=16,
+                              bk=16, interpret=True)
+    assert got.dtype == jnp.bfloat16
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=5e-2, atol=0.1)
+
+
+@settings(max_examples=6, deadline=None)
+@given(sew=st.sampled_from([32, 16]), seed=st.integers(0, 999))
+def test_matmul_program_semantics_at_sew(sew, seed):
+    """The paper's matmul kernel stays correct (to SEW rounding) at every
+    width — the end-to-end version of the datapath-split claim."""
+    r = np.random.RandomState(seed)
+    n = 8
+    cfg = AraConfig(lanes=2)
+    A, B, C = r.randn(n, n), r.randn(n, n), r.randn(n, n)
+    mem = np.concatenate([A.ravel(), B.ravel(), C.ravel()])
+    prog = isa.matmul_program(n, 0, n * n, 2 * n * n, t=4,
+                              vlmax=cfg.vlmax(sew), sew=sew)
+    out, _ = ReferenceEngine(cfg).run(prog, mem)
+    tol = 1e-4 if sew == 32 else 5e-2
+    np.testing.assert_allclose(out[2 * n * n:].reshape(n, n), A @ B + C,
+                               rtol=tol, atol=tol * 4)

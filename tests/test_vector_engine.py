@@ -90,6 +90,14 @@ assert np.abs(o1-o2).max() < 1e-9
 prog = [isa.VSETVL(16), isa.VLD(5, 0)] + isa.slide_reduce_program(5, 16, sd=1)
 _, s = lane.run(prog, x[:16])
 assert abs(s[1] - x[:16].sum()) < 1e-9
+mem = rng.randn(64)
+mem[:16] = rng.randint(0, 32, 16)      # gather indices, integer-exact
+prog = [isa.VSETVL(16), isa.VLD(7, 0), isa.VGATHER(8, 32, 7),
+        isa.VST(8, 16)]
+o1, _ = ref.run(prog, mem.copy())
+o2, _ = lane.run(prog, mem.copy())
+assert np.abs(o1 - o2).max() < 1e-9, np.abs(o1 - o2).max()
+assert np.abs(o1[16:32] - mem[32 + mem[:16].astype(int)]).max() < 1e-9
 print("LANE_OK")
 """
     assert "LANE_OK" in run_devices(code, n_devices=4, x64=True)
