@@ -36,12 +36,13 @@ class AraConfig:
         """Max DP elements per vector register (VRF split over 32 regs)."""
         return self.vlmax(64)
 
-    def vlmax(self, sew_bits: int = 64) -> int:
-        """Max elements per vector register at a given SEW: registers are
-        fixed-size byte slices of the VRF, so halving the element width
-        doubles the element capacity (§III-E4)."""
+    def vlmax(self, sew_bits: int = 64, lmul: int = 1) -> int:
+        """Max elements per vector operand at a given SEW and LMUL:
+        registers are fixed-size byte slices of the VRF, so halving the
+        element width doubles the element capacity (§III-E4), and an
+        LMUL-register group holds LMUL× more (RVV 1.0 grouping)."""
         total_bytes = self.lanes * self.vrf_kib_per_lane * 1024
-        return total_bytes // 32 // (sew_bits // 8)
+        return total_bytes // 32 // (sew_bits // 8) * lmul
 
     def peak_flop_per_cycle(self, ew_bits: int = 64) -> int:
         """Multi-precision: the 64-bit datapath subdivides (64/ew) ways.

@@ -18,32 +18,68 @@ from jax.sharding import PartitionSpec as PS
 from repro.core.compat import shard_map
 
 
-def all_gather_matmul(x, w, mesh, axis: str, transpose: bool = False):
+def all_gather_matmul(x, w, mesh, axis: str, transpose: bool = False,
+                      group: int = 1):
     """y = all_gather(x, axis) @ w, overlapped.
 
     x: (m_local, k) sharded on ``axis`` along m; w: (k, n) replicated.
     Computes x_full @ w without first materializing x_full: each step
-    multiplies the shard it holds while ppermuting the next shard in.
+    multiplies the shard(s) it holds while ppermuting the next in.
     Returns (m_local * n_axis, n) sharded like an all-gather result.
+
+    ``group`` is the ring's LMUL analogue (register grouping, §IV): the
+    steady-state loop moves a ``group``-shard buffer per ppermute and runs
+    one (group*m_local, k) matmul per hop — n_dev/group collective
+    launches instead of n_dev, each hiding a ``group``× longer compute
+    chain, exactly how grouped vector registers amortize the issue
+    interval. A short fill phase of ``group - 1`` single-shard hops plays
+    the operand-queue warm-up. Requires ``n_dev % group == 0``.
     """
     n_dev = mesh.shape[axis]
+    assert n_dev % group == 0, (n_dev, group)
 
     def device_fn(x_loc, w_loc):
         idx = jax.lax.axis_index(axis)
         m_loc = x_loc.shape[0]
-        out = jnp.zeros((n_dev * m_loc, w_loc.shape[1]), x_loc.dtype)
-        perm = [(i, (i + 1) % n_dev) for i in range(n_dev)]
+        n_out = w_loc.shape[1]
+        out = jnp.zeros((n_dev * m_loc, n_out), x_loc.dtype)
+        perm1 = [(i, (i + 1) % n_dev) for i in range(n_dev)]
 
-        def body(i, carry):
-            buf, out = carry
-            src = (idx - i) % n_dev           # owner of the shard we hold
-            part = jnp.dot(buf, w_loc, preferred_element_type=jnp.float32)
-            out = jax.lax.dynamic_update_slice(
-                out, part.astype(out.dtype), (src * m_loc, 0))
-            buf = jax.lax.ppermute(buf, axis, perm)
-            return (buf, out)
+        # fill: assemble the group buffer [idx, idx-1, ..., idx-group+1]
+        big0 = jnp.zeros((group * m_loc, x_loc.shape[1]), x_loc.dtype)
+        big0 = jax.lax.dynamic_update_slice(big0, x_loc, (0, 0))
 
-        buf, out = jax.lax.fori_loop(0, n_dev, body, (x_loc, out))
+        def fill(j, carry):
+            big, cur = carry
+            cur = jax.lax.ppermute(cur, axis, perm1)
+            row = ((j + 1) * m_loc).astype(jnp.int32)
+            big = jax.lax.dynamic_update_slice(big, cur,
+                                               (row, jnp.int32(0)))
+            return (big, cur)
+
+        big, _ = jax.lax.fori_loop(0, group - 1, fill, (big0, x_loc))
+
+        perm_g = [(i, (i + group) % n_dev) for i in range(n_dev)]
+
+        def body(s, carry):
+            big, out = carry
+            # one long chain per hop: (group*m_loc, k) @ (k, n)
+            part = jnp.dot(big, w_loc, preferred_element_type=jnp.float32)
+
+            def put(j, out):
+                src = (idx - s * group - j) % n_dev   # shard owner
+                blk = jax.lax.dynamic_slice(
+                    part, ((j * m_loc).astype(jnp.int32), jnp.int32(0)),
+                    (m_loc, n_out))
+                return jax.lax.dynamic_update_slice(
+                    out, blk.astype(out.dtype),
+                    ((src * m_loc).astype(jnp.int32), jnp.int32(0)))
+
+            out = jax.lax.fori_loop(0, group, put, out)
+            big = jax.lax.ppermute(big, axis, perm_g)
+            return (big, out)
+
+        big, out = jax.lax.fori_loop(0, n_dev // group, body, (big, out))
         return out
 
     return shard_map(device_fn, mesh=mesh,

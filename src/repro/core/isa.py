@@ -30,6 +30,37 @@ model for "multiply narrow, accumulate wide" mixed-precision kernels.
 ``VFNCVT`` narrows a 2·SEW-wide register back to SEW. Widening ops are
 illegal at SEW=64 (2·SEW would exceed the 64-bit datapath, RVV's
 ELEN limit) — the engines raise on such programs.
+
+Register grouping / LMUL semantics (RVV 1.0, Ara2)
+--------------------------------------------------
+``VSETVL(vl, sew, lmul)`` additionally selects a register-group multiplier
+LMUL ∈ {1, 2, 4, 8}: each vector operand names a *group* of LMUL
+architectural registers, so VLMAX scales to ``lmul * vlmax(sew)`` and one
+instruction keeps its functional unit busy for up to LMUL× longer — this
+is what amortizes the 5-cycle issue interval on short-vector workloads
+(§IV; the motivation for Ara2's RVV-1.0 upgrade). Legality, enforced by
+``check_insn`` (shared by both engines, the scoreboard, and the test
+oracle):
+
+- group base registers must be LMUL-aligned (``reg % lmul == 0``);
+- widening results have EMUL = 2·LMUL: the destination must be
+  2·LMUL-aligned, must not overlap either narrow source group, and
+  LMUL=8 widening is illegal (EMUL would exceed 8);
+- narrowing (``VFNCVT``) reads a 2·LMUL-wide source; the destination may
+  overlap it only in the lowest-numbered position (``vd == vs``);
+- segment ops (``VLSEG``/``VSSEG``) touch ``nf`` consecutive groups
+  (fields), requiring ``nf * lmul <= 8`` and the whole span in-bounds.
+
+Storage note: this is a *value* model — wide (2·SEW) results are held in
+the low LMUL registers of their 2·LMUL-reserved span at full precision;
+EMUL affects legality and scoreboard occupancy, not byte layout.
+
+Memory ops: ``VLSEG``/``VSSEG`` move ``nf``-field structures
+(array-of-structs de/interleave: field f, element i at ``addr + i*nf +
+f``). ``VLUXEI``/``VSUXEI`` are RVV 1.0 indexed-unordered load/store;
+out-of-range indices clamp to the memory edges exactly like ``VGATHER``,
+and colliding scatter indices resolve highest-element-index-wins — the
+deterministic contract every engine and the oracle share.
 """
 from __future__ import annotations
 
@@ -38,6 +69,7 @@ from typing import Optional
 
 NUM_VREGS = 32
 SEWS = (64, 32, 16)              # supported selected element widths (bits)
+LMULS = (1, 2, 4, 8)             # supported register-group multipliers
 
 
 @dataclasses.dataclass(frozen=True)
@@ -49,6 +81,7 @@ class Insn:
 class VSETVL(Insn):
     vl: int                      # requested vector length (AVL)
     sew: int = 64                # selected element width (bits)
+    lmul: int = 1                # register group multiplier
     unit = "seq"
 
 
@@ -79,6 +112,38 @@ class VGATHER(Insn):             # indexed load: vd[i] = mem[addr + vidx[i]]
 class VST(Insn):
     vs: int
     addr: int
+    unit = "vlsu"
+
+
+@dataclasses.dataclass(frozen=True)
+class VLSEG(Insn):               # segment load: field f of element i is at
+    vd: int                      #   mem[addr + i*nf + f]; lands in group
+    addr: int                    #   vd + f*lmul (AoS -> nf register groups)
+    nf: int = 2
+    unit = "vlsu"
+
+
+@dataclasses.dataclass(frozen=True)
+class VSSEG(Insn):               # segment store: interleaves nf groups back
+    vs: int
+    addr: int
+    nf: int = 2
+    unit = "vlsu"
+
+
+@dataclasses.dataclass(frozen=True)
+class VLUXEI(Insn):              # indexed-unordered load (RVV 1.0 vluxei):
+    vd: int                      #   vd[i] = mem[clamp(addr + vidx[i])]
+    addr: int
+    vidx: int
+    unit = "vlsu"
+
+
+@dataclasses.dataclass(frozen=True)
+class VSUXEI(Insn):              # indexed-unordered store (scatter):
+    vs: int                      #   mem[clamp(addr + vidx[i])] = vs[i];
+    addr: int                    #   collisions: highest element index wins
+    vidx: int
     unit = "vlsu"
 
 
@@ -176,49 +241,195 @@ class LDSCALAR(Insn):            # Ariane-side scalar load feeding VINS
 
 
 # ---------------------------------------------------------------------------
+# Operand legality (register grouping rules) — single source of truth for
+# both engines, the timing scoreboard and the differential test oracle.
+# ---------------------------------------------------------------------------
+
+# vector operand table: insn -> ((attr, wide?, mode), ...); mode is one of
+# "r" (read), "w" (write), "rw" (read-modify-write accumulators).
+_VOPS = {
+    VLD: (("vd", False, "w"),),
+    VLDS: (("vd", False, "w"),),
+    VGATHER: (("vd", False, "w"), ("vidx", False, "r")),
+    VLUXEI: (("vd", False, "w"), ("vidx", False, "r")),
+    VSUXEI: (("vs", False, "r"), ("vidx", False, "r")),
+    VST: (("vs", False, "r"),),
+    VFMA: (("vd", False, "rw"), ("va", False, "r"), ("vb", False, "r")),
+    VFMA_VS: (("vd", False, "rw"), ("vb", False, "r")),
+    VFADD: (("vd", False, "w"), ("va", False, "r"), ("vb", False, "r")),
+    VFMUL: (("vd", False, "w"), ("va", False, "r"), ("vb", False, "r")),
+    VADD: (("vd", False, "w"), ("va", False, "r"), ("vb", False, "r")),
+    VFWMUL: (("vd", True, "w"), ("va", False, "r"), ("vb", False, "r")),
+    VFWMA: (("vd", True, "rw"), ("va", False, "r"), ("vb", False, "r")),
+    VFNCVT: (("vd", False, "w"), ("vs", True, "r")),
+    VINS: (("vd", False, "w"),),
+    VEXT: (("vs", False, "r"),),
+    VSLIDE: (("vd", False, "w"), ("vs", False, "r")),
+}
+
+_WIDENING_OPS = (VFWMUL, VFWMA)
+
+
+def check_vtype(sew: int, lmul: int = 1):
+    if sew not in SEWS:
+        raise ValueError(f"unsupported SEW {sew}")
+    if lmul not in LMULS:
+        raise ValueError(f"unsupported LMUL {lmul}")
+
+
+def _check_group(base: int, span: int, what: str):
+    if base % span:
+        raise ValueError(
+            f"{what}: register v{base} not aligned to group span {span}")
+    if base < 0 or base + span > NUM_VREGS:
+        raise ValueError(
+            f"{what}: group v{base}..v{base + span - 1} exceeds the "
+            f"{NUM_VREGS}-register file")
+
+
+def reg_groups(ins, lmul: int = 1):
+    """Vector register groups an instruction touches at the current vtype.
+
+    Returns ``(reads, writes)``: lists of ``(base, span)`` pairs, spans in
+    architectural registers (wide operands span 2*LMUL — the EMUL rule).
+    Segment ops expand to one group per field.
+    """
+    t = type(ins)
+    reads, writes = [], []
+    if t is VLSEG:
+        writes += [(ins.vd + f * lmul, lmul) for f in range(ins.nf)]
+    elif t is VSSEG:
+        reads += [(ins.vs + f * lmul, lmul) for f in range(ins.nf)]
+    else:
+        for attr, wide, mode in _VOPS.get(t, ()):
+            grp = (getattr(ins, attr), 2 * lmul if wide else lmul)
+            if "r" in mode:
+                reads.append(grp)
+            if "w" in mode:
+                writes.append(grp)
+    return reads, writes
+
+
+def _overlaps(a, b):
+    return a[0] < b[0] + b[1] and b[0] < a[0] + a[1]
+
+
+def check_insn(ins, sew: int, lmul: int = 1):
+    """Raise ValueError if ``ins`` is illegal at the current vtype.
+
+    Encodes the RVV 1.0 rules the module docstring describes: group
+    alignment, the widening EMUL=2*LMUL reservation and its source-overlap
+    prohibition, the narrowing lowest-part overlap exception, and the
+    segment-op ``nf * lmul <= 8`` span limit.
+    """
+    t = type(ins)
+    name = t.__name__
+    if t is VSETVL:
+        check_vtype(ins.sew, ins.lmul)
+        return
+    if t in _WIDENING_OPS or t is VFNCVT:
+        if sew == max(SEWS):
+            raise ValueError(
+                f"{name} illegal at SEW={sew} (2*SEW exceeds ELEN=64)")
+        if 2 * lmul > max(LMULS):
+            raise ValueError(
+                f"{name} illegal at LMUL={lmul} (EMUL=2*LMUL exceeds "
+                f"{max(LMULS)})")
+    if t in (VLSEG, VSSEG):
+        if ins.nf < 1 or ins.nf * lmul > max(LMULS):
+            raise ValueError(
+                f"{name}: nf={ins.nf} illegal at LMUL={lmul} "
+                f"(need 1 <= nf*lmul <= {max(LMULS)})")
+    reads, writes = reg_groups(ins, lmul)
+    for base, span in reads + writes:
+        _check_group(base, span, name)
+    if t in _WIDENING_OPS:
+        dst = (ins.vd, 2 * lmul)
+        for src in ((ins.va, lmul), (ins.vb, lmul)):
+            if _overlaps(dst, src):
+                raise ValueError(
+                    f"{name}: wide destination v{ins.vd} (span {2 * lmul}) "
+                    f"overlaps narrow source v{src[0]}")
+    if t is VFNCVT:
+        dst, src = (ins.vd, lmul), (ins.vs, 2 * lmul)
+        if _overlaps(dst, src) and ins.vd != ins.vs:
+            raise ValueError(
+                f"VFNCVT: destination v{ins.vd} overlaps wide source "
+                f"v{ins.vs} outside the lowest-numbered position")
+
+
+def validate_program(program):
+    """Statically check a whole program; returns it unchanged if legal."""
+    sew, lmul = max(SEWS), 1
+    for ins in program:
+        check_insn(ins, sew, lmul)
+        if type(ins) is VSETVL:
+            sew, lmul = ins.sew, ins.lmul
+    return program
+
+
+# ---------------------------------------------------------------------------
 # Program builders for the paper's kernels
 # ---------------------------------------------------------------------------
 
 
 def daxpy_program(n: int, x_addr: int, y_addr: int, alpha_sreg: int = 0,
-                  vlmax: Optional[int] = None, sew: int = 64):
-    """Y <- alpha*X + Y, strip-mined (Fig. 9 style)."""
-    vlmax = vlmax or n
+                  vlmax: Optional[int] = None, sew: int = 64,
+                  lmul: int = 1):
+    """Y <- alpha*X + Y, strip-mined (Fig. 9 style).
+
+    ``vlmax`` is the per-register VLMAX at ``sew``; grouping multiplies the
+    strip length by ``lmul`` (fewer trips, longer chains). Registers are
+    picked LMUL-aligned: x in v[lmul], y in v[2*lmul], alpha in v[3*lmul].
+    """
+    vlmax = (vlmax or n) * lmul
+    vx, vy, va = lmul, 2 * lmul, 3 * lmul
     prog = []
     c = 0
     while c < n:
         vl = min(n - c, vlmax)
-        prog += [VSETVL(vl, sew),
-                 VLD(1, x_addr + c),
-                 VLD(2, y_addr + c),
-                 VINS(3, alpha_sreg),
-                 VFMA(2, 3, 1),              # y += alpha * x
-                 VST(2, y_addr + c)]
+        prog += [VSETVL(vl, sew, lmul),
+                 VLD(vx, x_addr + c),
+                 VLD(vy, y_addr + c),
+                 VINS(va, alpha_sreg),
+                 VFMA(vy, va, vx),           # y += alpha * x
+                 VST(vy, y_addr + c)]
         c += vl
     return prog
 
 
 def matmul_program(n: int, a_addr: int, b_addr: int, c_addr: int,
-                   t: int = 4, vlmax: Optional[int] = None, sew: int = 64):
-    """Listing 1: C <- A B + C, row-major, tiles of t rows, strip-mined."""
-    vlmax = vlmax or n
+                   t: int = 4, vlmax: Optional[int] = None, sew: int = 64,
+                   lmul: int = 1):
+    """Listing 1: C <- A B + C, row-major, tiles of t rows, strip-mined.
+
+    With grouping the strip covers ``lmul * vlmax`` columns per VSETVL and
+    every VLD/VFMA names an LMUL-register group, so the per-column issue
+    cost is amortized over LMUL× more elements. The row-tile height t is
+    clamped so the B row, the broadcast group and t accumulator groups fit
+    the 32-register file: t <= 32/lmul - 2 (the register-pressure cost of
+    grouping — B-row reuse shrinks as LMUL grows, Ara2's trade-off).
+    """
+    vlmax = (vlmax or n) * lmul
+    t = max(1, min(t, NUM_VREGS // lmul - 2))
+    vb, vbc, vc0 = 0, lmul, 2 * lmul          # B row, broadcast, C tiles
     prog = []
     col = 0
     while col < n:
         vl = min(n - col, vlmax)
-        prog.append(VSETVL(vl, sew))
+        prog.append(VSETVL(vl, sew, lmul))
         for r0 in range(0, n, t):
             rows = min(t, n - r0)
             for j in range(rows):            # phase I
-                prog.append(VLD(4 + j, c_addr + (r0 + j) * n + col))
+                prog.append(VLD(vc0 + j * lmul, c_addr + (r0 + j) * n + col))
             for i in range(n):               # phase II
-                prog.append(VLD(2, b_addr + i * n + col))
+                prog.append(VLD(vb, b_addr + i * n + col))
                 for j in range(rows):
                     prog.append(LDSCALAR(1, a_addr + (r0 + j) * n + i))
-                    prog.append(VINS(3, 1))
-                    prog.append(VFMA_VS(4 + j, 1, 2))
+                    prog.append(VINS(vbc, 1))
+                    prog.append(VFMA_VS(vc0 + j * lmul, 1, vb))
             for j in range(rows):            # phase III
-                prog.append(VST(4 + j, c_addr + (r0 + j) * n + col))
+                prog.append(VST(vc0 + j * lmul, c_addr + (r0 + j) * n + col))
         col += vl
     return prog
 

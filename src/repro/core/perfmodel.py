@@ -39,6 +39,9 @@ C_MEM_LANE = 1.25  # cycles/lane: VLSU collection/arbitration per burst
 C_COL_LANE = 1.25 / 8.0  # cycles/lane: per-column operand-queue bubble
 CONV_GAMMA1 = 0.2  # banking-conflict share of concurrent VLSU traffic
 CONV_SHORT_PEN = 0.5  # cycles/vmadd when a vector spans < 8 banks
+STRIP_SETVL = 2.0  # cycles: vsetvl/dispatch serialization per extra strip
+                   # (the rest of the loop body issues under the previous
+                   # strip's memory time — chaining hides it)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -48,6 +51,7 @@ class KernelPerf:
     flops: float
     lanes: int
     ew_bits: int = 64            # element width the kernel executed at
+    lmul: int = 1                # register grouping the kernel ran with
 
     @property
     def flop_per_cycle(self) -> float:
@@ -75,11 +79,23 @@ class KernelPerf:
 def matmul_cycles(cfg: AraConfig, n: int, t: int = 4,
                   issue_interval: float | None = None,
                   mem_bytes_per_cycle: float | None = None,
-                  ew_bits: int = 64) -> float:
+                  ew_bits: int = 64, lmul: int = 1) -> float:
     """Cycle model, multi-precision aware (§III-E4): at element width
     ``ew_bits`` the FPU retires 64/ew elements/lane/cycle, memory moves
     ew/8-byte elements, and VLMAX grows by 64/ew (fewer strip-mine trips).
+
+    Register grouping (``lmul``) multiplies VLMAX again: each strip covers
+    LMUL× more columns, so per-column issue slots amortize over longer FPU
+    chains and the per-strip burst/drain/config overheads are paid fewer
+    times — the §IV issue-interval amortization in closed form. The row
+    tile is clamped to what the 32-register file can hold at this LMUL
+    (t <= 32/lmul - 2, same rule as isa.matmul_program), so high LMUL
+    also pays its real register-pressure cost: less B-row reuse. Net:
+    grouping wins in the short-vector regime and over-grouping loses in
+    the long-vector one — the Ara2 trade-off, and the scoreboard agrees.
     """
+    from repro.core.isa import NUM_VREGS
+    t = max(1, min(t, NUM_VREGS // lmul - 2))
     lanes = cfg.lanes
     ways = 64 // ew_bits                     # datapath subdivision
     ebytes = ew_bits / 8.0
@@ -87,7 +103,7 @@ def matmul_cycles(cfg: AraConfig, n: int, t: int = 4,
         else cfg.issue_interval_cycles
     bw = mem_bytes_per_cycle if mem_bytes_per_cycle is not None \
         else cfg.mem_bytes_per_cycle
-    vlmax = cfg.vlmax(ew_bits)
+    vlmax = cfg.vlmax(ew_bits, lmul)
     cycles = 0.0
     c = 0
     while c < n:
@@ -113,9 +129,11 @@ def matmul_cycles(cfg: AraConfig, n: int, t: int = 4,
     return cycles
 
 
-def matmul_perf(cfg: AraConfig, n: int, ew_bits: int = 64, **kw) -> KernelPerf:
-    return KernelPerf("matmul", matmul_cycles(cfg, n, ew_bits=ew_bits, **kw),
-                      2.0 * n ** 3, cfg.lanes, ew_bits)
+def matmul_perf(cfg: AraConfig, n: int, ew_bits: int = 64, lmul: int = 1,
+                **kw) -> KernelPerf:
+    return KernelPerf("matmul",
+                      matmul_cycles(cfg, n, ew_bits=ew_bits, lmul=lmul, **kw),
+                      2.0 * n ** 3, cfg.lanes, ew_bits, lmul)
 
 
 def matmul_issue_bound(cfg: AraConfig, n: int) -> float:
@@ -142,17 +160,25 @@ def matmul_roofline(cfg: AraConfig, n: int, ew_bits: int = 64) -> float:
 # ---------------------------------------------------------------------------
 
 
-def daxpy_cycles(cfg: AraConfig, n: int, ew_bits: int = 64) -> float:
+def daxpy_cycles(cfg: AraConfig, n: int, ew_bits: int = 64,
+                 lmul: int = 1) -> float:
     # memory-bound: 3 * ew/8 * n bytes over 4*lanes B/cycle (= 6n/lanes at
-    # ew=64), plus the paper's measured 24-cycle config overhead (§V-B)
+    # ew=64), plus the paper's measured 24-cycle config overhead (§V-B).
+    # Each strip-mine trip beyond the first serializes on its vsetvl
+    # (STRIP_SETVL); LMUL-grouped strips cover lmul*VLMAX elements, so
+    # grouping trims exactly this term — the memory-bound kernel's share
+    # of the §IV issue amortization.
     bytes_moved = 3.0 * (ew_bits / 8.0) * n
+    n_strips = max(1, math.ceil(n / cfg.vlmax(ew_bits, lmul)))
     return bytes_moved / cfg.mem_bytes_per_cycle \
-        + cfg.config_overhead_cycles
+        + cfg.config_overhead_cycles \
+        + (n_strips - 1) * STRIP_SETVL
 
 
-def daxpy_perf(cfg: AraConfig, n: int, ew_bits: int = 64) -> KernelPerf:
-    return KernelPerf("daxpy", daxpy_cycles(cfg, n, ew_bits), 2.0 * n,
-                      cfg.lanes, ew_bits)
+def daxpy_perf(cfg: AraConfig, n: int, ew_bits: int = 64,
+               lmul: int = 1) -> KernelPerf:
+    return KernelPerf("daxpy", daxpy_cycles(cfg, n, ew_bits, lmul), 2.0 * n,
+                      cfg.lanes, ew_bits, lmul)
 
 
 # ---------------------------------------------------------------------------

@@ -49,12 +49,24 @@ def ara_speedup_vs_dp(sew: int) -> float:
             / ARA_FLOP_PER_CYCLE_PER_LANE[64])
 
 
+def issue_amortization(vl: int, lanes: int, sew: int = 64, lmul: int = 1,
+                       issue_interval: float = 5.0) -> float:
+    """§IV in closed form: FPU-busy cycles of one grouped vector FMA per
+    issue slot it consumes. >= 1 means the 5-cycle issue interval is fully
+    hidden; register grouping multiplies the numerator by LMUL, which is
+    why Ara2 adds it for short-vector workloads."""
+    chain = (lmul * vl / lanes) / (64 // sew)   # busy cycles per insn
+    return chain / issue_interval
+
+
 @dataclasses.dataclass(frozen=True)
 class Policy:
     param_dtype: str = "float32"
     compute_dtype: str = "bfloat16"
     accum_dtype: str = "float32"
     cache_dtype: str = "bfloat16"
+    lmul: int = 1                # register grouping the Ara analogue uses;
+                                 # kernels scale block shapes by it
 
     def peak_flops(self) -> float:
         return PEAKS_FLOPS[self.compute_dtype]
@@ -70,6 +82,12 @@ class Policy:
 
     def ara_speedup(self) -> float:
         return ara_speedup_vs_dp(self.sew)
+
+    def issue_amortization(self, vl: int, lanes: int,
+                           issue_interval: float = 5.0) -> float:
+        """Chain length per issue slot at this policy's SEW and LMUL."""
+        return issue_amortization(vl, lanes, self.sew, self.lmul,
+                                  issue_interval)
 
     def cast_params(self, tree):
         import jax

@@ -11,6 +11,11 @@ lets one binary run on any lane count. Our analogues:
   bound by the 5-cycle issue interval (Eq. 2); the TPU analogue is host
   dispatch per step. Fusing K steps into one dispatched scan amortizes the
   "instruction issue" exactly like longer vectors amortize fetch.
+- ``strip_lengths`` / ``lmul_tile``: the RVV 1.0 LMUL generalization of
+  the Fig. 9 loop — register grouping multiplies VLMAX, so each strip (and
+  each Pallas block) covers LMUL× more elements per dispatched step. The
+  kernels consult ``lmul_tile`` to scale their block shapes; the ISA
+  builders and perfmodel consult the same arithmetic via AraConfig.vlmax.
 """
 from __future__ import annotations
 
@@ -18,6 +23,39 @@ import functools
 
 import jax
 import jax.numpy as jnp
+
+
+def strip_lengths(n: int, vlmax: int, lmul: int = 1):
+    """Fig. 9 line 3 with grouping: the vl of each strip-mine trip.
+
+    ``vlmax`` is the per-register VLMAX at the current SEW; an LMUL-
+    register group covers ``lmul * vlmax`` elements per trip, so the list
+    shrinks by up to LMUL× — fewer vsetvl/dispatch overheads per kernel.
+    """
+    step = vlmax * lmul
+    out = []
+    c = 0
+    while c < n:
+        out.append(min(n - c, step))
+        c += out[-1]
+    return out
+
+
+def lmul_tile(n: int, base: int, lmul: int = 1, cap: int | None = None):
+    """Pick a block edge for an LMUL-grouped kernel: the largest divisor
+    of ``n`` no bigger than ``min(base * lmul, n, cap)``.
+
+    Divisibility keeps Pallas grids exact (the kernels assert n % block
+    == 0); the LMUL scaling is the register-grouping analogue — one grid
+    step streams an LMUL× longer "vector" through the MXU/VPU, amortizing
+    per-step dispatch exactly like grouped registers amortize the 5-cycle
+    issue interval.
+    """
+    limit = min(base * lmul, n, cap if cap is not None else n)
+    for b in range(limit, 0, -1):
+        if n % b == 0:
+            return b
+    return 1
 
 
 def stripmine_map(fn, xs, strip: int):

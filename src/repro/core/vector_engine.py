@@ -16,12 +16,33 @@ file (storage stays the engine dtype — value semantics, HW-width rounding).
 Widening ops (VFWMUL/VFWMA) round once into the 2·SEW format, modeling
 "multiply narrow, accumulate wide" mixed-precision FMAs.
 
+Register grouping (RVV 1.0 LMUL): a vector operand names LMUL consecutive
+registers holding up to ``lmul * vlmax(sew)`` elements — element ``m`` of a
+group lives in register ``base + m // vlmax(sew)``. Both engines execute
+grouped operands through flat read/write helpers so every op (arithmetic,
+slides, the whole VLSU repertoire) is written once against the flattened
+element view; ``isa.check_insn`` is consulted per instruction, so illegal
+alignment/overlap raises identically here, in the scoreboard, and in the
+test oracle. In the LaneEngine the interleaved lane layout is preserved
+across the group (element ``m`` on lane ``m % lanes`` regardless of LMUL),
+which keeps slides/permutes a single uniform code path.
+
+VLSU model: unit-stride (VLD/VST), constant-stride (VLDS), segment
+(VLSEG/VSSEG: ``nf``-field AoS de/interleave), and indexed
+(VGATHER/VLUXEI loads, VSUXEI scatter). Indexed addresses clamp to the
+memory edges (OOB is UB in HW; the model pins it); scatter collisions
+resolve highest-element-index-wins in both engines, so the differential
+contract stays exact even for colliding or clamped index vectors.
+
 ``simulate_timing`` is an event-driven scoreboard (issue interval, per-unit
 occupancy, chaining lag) giving an instruction-accurate cycle estimate that
 cross-validates the closed-form core/perfmodel.py. FPU/SLDU occupancy
 scales as e / (64/SEW) — the datapath subdivides 64/SEW ways, reproducing
 the paper's 2×/4× throughput claim — and VLSU bursts move SEW/8-byte
-elements, so memory occupancy shrinks proportionally too.
+elements, so memory occupancy shrinks proportionally too. LMUL enters as
+vector length: one grouped instruction occupies its unit for up to LMUL×
+longer against a single issue slot, which is exactly the paper's §IV
+issue-interval amortization (and the reason Ara2 adopted grouping).
 """
 from __future__ import annotations
 
@@ -66,6 +87,40 @@ def _quantize(x, bits: int, storage):
     return x.astype(dt).astype(storage)
 
 
+def _group_read(v, reg: int, vl: int, vpr: int, lmul: int):
+    """Flat (vl,) view of a register group (contiguous element layout)."""
+    if vl <= vpr:
+        return v[reg, :vl]
+    return jnp.concatenate([v[reg + g, :vpr] for g in range(lmul)])[:vl]
+
+
+def _group_write(v, reg: int, vals, vl: int, vpr: int, lmul: int):
+    """Write (vl,) flat values back into a group; tail stays undisturbed."""
+    if vl <= vpr:
+        return v.at[reg, :vl].set(vals)
+    for g in range(lmul):
+        lo = g * vpr
+        if lo >= vl:
+            break
+        hi = min(vl, lo + vpr)
+        v = v.at[reg + g, :hi - lo].set(vals[lo:hi])
+    return v
+
+
+def _scatter_last_wins(mem, idx, vals, elem_ids):
+    """mem[idx[i]] = vals[i] with highest-element-index-wins collisions.
+
+    ``elem_ids`` are the global element indices (monotone in program
+    element order); the winner per address is the max id targeting it —
+    the deterministic rule all engines and the oracle share.
+    """
+    order = jnp.full(mem.shape, -1, jnp.int32).at[idx].max(
+        elem_ids.astype(jnp.int32))
+    win = order[idx] == elem_ids
+    contrib = jnp.zeros_like(mem).at[idx].add(jnp.where(win, vals, 0))
+    return jnp.where(order >= 0, contrib, mem)
+
+
 # ---------------------------------------------------------------------------
 # Reference engine (single device oracle)
 # ---------------------------------------------------------------------------
@@ -83,15 +138,15 @@ class ReferenceEngine:
     def vlmax(self) -> int:
         return self.vlmax64
 
-    def vlmax_for(self, sew: int) -> int:
-        return self.vlmax64 * (64 // sew)
+    def vlmax_for(self, sew: int, lmul: int = 1) -> int:
+        return self.vlmax64 * (64 // sew) * lmul
 
     def run(self, program, memory, sregs: Optional[dict] = None):
         mem = jnp.asarray(memory, self.dtype)
         n_elems = self.vlmax_for(MIN_SEW)
         v = jnp.zeros((isa.NUM_VREGS, n_elems), self.dtype)
         s = dict(sregs or {})
-        vl, sew = self.vlmax64, 64
+        vl, sew, lmul = self.vlmax64, 64, 1
 
         def q(x, bits):
             # HW-width rounding; storage stays the engine dtype
@@ -99,61 +154,74 @@ class ReferenceEngine:
 
         for ins in program:
             t = type(ins)
+            isa.check_insn(ins, sew, lmul)
+            vpr = self.vlmax_for(sew)        # per-register capacity
+
+            def R(reg):
+                return _group_read(v, reg, vl, vpr, lmul)
+
+            def W(vv, reg, vals):
+                return _group_write(vv, reg, vals, vl, vpr, lmul)
+
             if t is isa.VSETVL:
-                if ins.sew not in isa.SEWS:
-                    raise ValueError(f"unsupported SEW {ins.sew}")
-                sew = ins.sew
-                vl = min(ins.vl, self.vlmax_for(sew))
+                sew, lmul = ins.sew, ins.lmul
+                vl = min(ins.vl, self.vlmax_for(sew, lmul))
             elif t is isa.VLD:
-                v = v.at[ins.vd, :vl].set(
-                    q(jax.lax.dynamic_slice(mem, (ins.addr,), (vl,)), sew))
+                v = W(v, ins.vd,
+                      q(jax.lax.dynamic_slice(mem, (ins.addr,), (vl,)), sew))
             elif t is isa.VLDS:
                 idx = ins.addr + ins.stride * jnp.arange(vl)
-                v = v.at[ins.vd, :vl].set(q(mem[idx], sew))
-            elif t is isa.VGATHER:
+                v = W(v, ins.vd, q(mem[idx], sew))
+            elif t in (isa.VGATHER, isa.VLUXEI):
                 # clamp like LaneEngine (and the test oracle): OOB indexed
                 # loads are UB in HW; the model pins them to the edges
-                idx = ins.addr + v[ins.vidx, :vl].astype(jnp.int32)
+                idx = ins.addr + R(ins.vidx).astype(jnp.int32)
                 idx = jnp.clip(idx, 0, mem.shape[0] - 1)
-                v = v.at[ins.vd, :vl].set(q(mem[idx], sew))
+                v = W(v, ins.vd, q(mem[idx], sew))
+            elif t is isa.VLSEG:
+                base = ins.addr + ins.nf * jnp.arange(vl)
+                for f in range(ins.nf):
+                    v = W(v, ins.vd + f * lmul, q(mem[base + f], sew))
             elif t is isa.VST:
-                mem = jax.lax.dynamic_update_slice(mem, v[ins.vs, :vl],
+                mem = jax.lax.dynamic_update_slice(mem, R(ins.vs),
                                                    (ins.addr,))
+            elif t is isa.VSSEG:
+                base = ins.addr + ins.nf * jnp.arange(vl)
+                for f in range(ins.nf):
+                    mem = mem.at[base + f].set(R(ins.vs + f * lmul))
+            elif t is isa.VSUXEI:
+                idx = ins.addr + R(ins.vidx).astype(jnp.int32)
+                idx = jnp.clip(idx, 0, mem.shape[0] - 1)
+                mem = _scatter_last_wins(mem, idx, R(ins.vs),
+                                         jnp.arange(vl))
             elif t is isa.VFMA:
-                v = v.at[ins.vd, :vl].set(
-                    q(v[ins.va, :vl] * v[ins.vb, :vl] + v[ins.vd, :vl], sew))
+                v = W(v, ins.vd, q(R(ins.va) * R(ins.vb) + R(ins.vd), sew))
             elif t is isa.VFMA_VS:
-                v = v.at[ins.vd, :vl].set(
-                    q(s[ins.vs_scalar] * v[ins.vb, :vl] + v[ins.vd, :vl],
-                      sew))
+                v = W(v, ins.vd,
+                      q(s[ins.vs_scalar] * R(ins.vb) + R(ins.vd), sew))
             elif t is isa.VFADD:
-                v = v.at[ins.vd, :vl].set(
-                    q(v[ins.va, :vl] + v[ins.vb, :vl], sew))
+                v = W(v, ins.vd, q(R(ins.va) + R(ins.vb), sew))
             elif t is isa.VFMUL:
-                v = v.at[ins.vd, :vl].set(
-                    q(v[ins.va, :vl] * v[ins.vb, :vl], sew))
+                v = W(v, ins.vd, q(R(ins.va) * R(ins.vb), sew))
             elif t is isa.VFWMUL:
-                v = v.at[ins.vd, :vl].set(
-                    q(v[ins.va, :vl] * v[ins.vb, :vl], _wide_bits(sew)))
+                v = W(v, ins.vd, q(R(ins.va) * R(ins.vb), _wide_bits(sew)))
             elif t is isa.VFWMA:
-                v = v.at[ins.vd, :vl].set(
-                    q(v[ins.va, :vl] * v[ins.vb, :vl] + v[ins.vd, :vl],
-                      _wide_bits(sew)))
+                v = W(v, ins.vd, q(R(ins.va) * R(ins.vb) + R(ins.vd),
+                                   _wide_bits(sew)))
             elif t is isa.VFNCVT:
-                v = v.at[ins.vd, :vl].set(q(v[ins.vs, :vl], sew))
+                v = W(v, ins.vd, q(R(ins.vs), sew))
             elif t is isa.VADD:
-                v = v.at[ins.vd, :vl].set(
-                    q(v[ins.va, :vl] + v[ins.vb, :vl], sew))
+                v = W(v, ins.vd, q(R(ins.va) + R(ins.vb), sew))
             elif t is isa.VINS:
-                v = v.at[ins.vd, :vl].set(
-                    q(jnp.full((vl,), s[ins.scalar], self.dtype), sew))
+                v = W(v, ins.vd,
+                      q(jnp.full((vl,), s[ins.scalar], self.dtype), sew))
             elif t is isa.VEXT:
-                s[ins.sd] = v[ins.vs, ins.idx]
+                s[ins.sd] = R(ins.vs)[ins.idx]
             elif t is isa.VSLIDE:
-                src = v[ins.vs, :vl]
+                src = R(ins.vs)
                 slid = jnp.roll(src, -ins.amount)
                 mask = jnp.arange(vl) < (vl - ins.amount)
-                v = v.at[ins.vd, :vl].set(jnp.where(mask, slid, 0))
+                v = W(v, ins.vd, jnp.where(mask, slid, 0))
             elif t is isa.LDSCALAR:
                 s[ins.sd] = mem[ins.addr]
             else:
@@ -171,8 +239,10 @@ class LaneEngine:
 
     Local layout: vregs (NUM_VREGS, lanes_local=1 per device, vlmax/lanes)
     — device ``l`` holds elements l, l+lanes, l+2*lanes, ... (interleaved,
-    barber's-pole equivalent). Memory is replicated (host DRAM analogue);
-    VST reconciles with psum, making the VLSU the single all-lane unit.
+    barber's-pole equivalent). Grouped operands concatenate each member
+    register's active slots, which reproduces the same interleaving over
+    the whole group. Memory is replicated (host DRAM analogue); stores
+    reconcile with psum/pmax, making the VLSU the single all-lane unit.
     """
 
     def __init__(self, cfg: AraConfig, mesh, axis: str = "lanes",
@@ -189,12 +259,11 @@ class LaneEngine:
     def vlmax(self) -> int:
         return self.vlmax64
 
-    def vlmax_for(self, sew: int) -> int:
-        return self.vlmax64 * (64 // sew)
+    def vlmax_for(self, sew: int, lmul: int = 1) -> int:
+        return self.vlmax64 * (64 // sew) * lmul
 
     def run(self, program, memory, sregs: Optional[dict] = None):
         lanes = self.lanes
-        e_max = self.vlmax_for(MIN_SEW) // lanes
         program = tuple(program)
         sregs = dict(sregs or {})
         n_s = 32                              # fixed scalar register file
@@ -204,83 +273,123 @@ class LaneEngine:
 
         def device_fn(mem, svec):
             lane = jax.lax.axis_index(self.axis)
+            e_max = self.vlmax_for(MIN_SEW) // lanes
             v = jnp.zeros((isa.NUM_VREGS, e_max), self.dtype)
             s = svec.astype(self.dtype)
-            vl, sew = self.vlmax64, 64
+            vl, sew, lmul = self.vlmax64, 64, 1
 
             def q(x, bits):
                 return _quantize(x, bits, self.dtype)
 
-            def owned_mask(vl):
-                # element ids owned by this lane: lane + k*lanes < vl
-                ids = lane + jnp.arange(e_max) * lanes
-                return ids < vl, ids
+            def store(mem, gidx, vals, valid):
+                # VLSU collect: scatter-add the valid contributions, count
+                # writers per address, reconcile across lanes via psum
+                gidx_safe = jnp.where(valid, gidx, 0)
+                vals = jnp.where(valid, vals, 0).astype(mem.dtype)
+                upd = jnp.zeros_like(mem).at[gidx_safe].add(vals)
+                cnt = jnp.zeros(mem.shape, jnp.int32).at[gidx_safe].add(
+                    valid.astype(jnp.int32))
+                upd = jax.lax.psum(upd, self.axis)
+                cnt = jax.lax.psum(cnt, self.axis)
+                return jnp.where(cnt > 0, upd, mem)
 
             for ins in program:
                 t = type(ins)
+                isa.check_insn(ins, sew, lmul)
+                spr = self.vlmax_for(sew) // lanes   # slots/register/lane
+                nsl = spr * lmul                     # slots/group/lane
+                ids = lane + jnp.arange(nsl) * lanes  # global element ids
+                mask = ids < vl
+
+                def R(reg):
+                    if lmul == 1:
+                        return v[reg, :spr]
+                    return jnp.concatenate(
+                        [v[reg + g, :spr] for g in range(lmul)])
+
+                def W(vv, reg, flat):
+                    if lmul == 1:
+                        return vv.at[reg, :spr].set(flat)
+                    for g in range(lmul):
+                        vv = vv.at[reg + g, :spr].set(
+                            flat[g * spr:(g + 1) * spr])
+                    return vv
+
                 if t is isa.VSETVL:
-                    if ins.sew not in isa.SEWS:
-                        raise ValueError(f"unsupported SEW {ins.sew}")
-                    sew = ins.sew
-                    vl = min(ins.vl, self.vlmax_for(sew))
+                    sew, lmul = ins.sew, ins.lmul
+                    vl = min(ins.vl, self.vlmax_for(sew, lmul))
                 elif t is isa.VLD:
-                    mask, ids = owned_mask(vl)
-                    vals = q(mem[ins.addr + ids * (ids < vl)], sew)
-                    v = v.at[ins.vd].set(jnp.where(mask, vals, 0))
+                    vals = q(mem[ins.addr + ids * mask], sew)
+                    v = W(v, ins.vd, jnp.where(mask, vals, 0))
                 elif t is isa.VLDS:
-                    mask, ids = owned_mask(vl)
-                    vals = q(mem[ins.addr + ins.stride * ids * (ids < vl)],
-                             sew)
-                    v = v.at[ins.vd].set(jnp.where(mask, vals, 0))
-                elif t is isa.VGATHER:
-                    mask, ids = owned_mask(vl)
-                    gidx = ins.addr + v[ins.vidx].astype(jnp.int32)
+                    vals = q(mem[ins.addr + ins.stride * ids * mask], sew)
+                    v = W(v, ins.vd, jnp.where(mask, vals, 0))
+                elif t in (isa.VGATHER, isa.VLUXEI):
+                    gidx = ins.addr + R(ins.vidx).astype(jnp.int32)
                     gidx = jnp.clip(jnp.where(mask, gidx, 0), 0,
                                     mem.shape[0] - 1)
                     vals = q(mem[gidx], sew)
-                    v = v.at[ins.vd].set(jnp.where(mask, vals, 0))
+                    v = W(v, ins.vd, jnp.where(mask, vals, 0))
+                elif t is isa.VLSEG:
+                    base = ins.addr + ins.nf * jnp.where(mask, ids, 0)
+                    for f in range(ins.nf):
+                        vals = q(mem[base + f], sew)
+                        v = W(v, ins.vd + f * lmul,
+                              jnp.where(mask, vals, 0))
                 elif t is isa.VST:
-                    mask, ids = owned_mask(vl)
                     gidx = ins.addr + ids
-                    valid = mask & (gidx < mem.shape[0])
-                    gidx_safe = jnp.where(valid, gidx, 0)
-                    vals = jnp.where(valid, v[ins.vs], 0).astype(mem.dtype)
-                    upd = jnp.zeros_like(mem).at[gidx_safe].add(vals)
-                    cnt = jnp.zeros(mem.shape, jnp.int32).at[gidx_safe].add(
-                        valid.astype(jnp.int32))
-                    upd = jax.lax.psum(upd, self.axis)     # VLSU collect
-                    cnt = jax.lax.psum(cnt, self.axis)
-                    mem = jnp.where(cnt > 0, upd, mem)
+                    v_ok = mask & (gidx < mem.shape[0])
+                    mem = store(mem, gidx, R(ins.vs), v_ok)
+                elif t is isa.VSSEG:
+                    for f in range(ins.nf):
+                        gidx = ins.addr + f + ins.nf * ids
+                        v_ok = mask & (gidx < mem.shape[0])
+                        mem = store(mem, gidx, R(ins.vs + f * lmul), v_ok)
+                elif t is isa.VSUXEI:
+                    gidx = ins.addr + R(ins.vidx).astype(jnp.int32)
+                    gidx = jnp.clip(jnp.where(mask, gidx, 0), 0,
+                                    mem.shape[0] - 1)
+                    # highest element wins: find each address's winning
+                    # element id globally (pmax), then contribute only it
+                    eid = jnp.where(mask, ids, -1).astype(jnp.int32)
+                    order = jnp.full(mem.shape, -1, jnp.int32) \
+                        .at[gidx].max(eid)
+                    order = jax.lax.pmax(order, self.axis)
+                    win = mask & (order[gidx] == ids)
+                    contrib = jnp.zeros_like(mem).at[
+                        jnp.where(win, gidx, 0)].add(
+                        jnp.where(win, R(ins.vs), 0).astype(mem.dtype))
+                    contrib = jax.lax.psum(contrib, self.axis)
+                    mem = jnp.where(order >= 0, contrib, mem)
                 elif t is isa.VFMA:
-                    v = v.at[ins.vd].set(
-                        q(v[ins.va] * v[ins.vb] + v[ins.vd], sew))
+                    v = W(v, ins.vd,
+                          q(R(ins.va) * R(ins.vb) + R(ins.vd), sew))
                 elif t is isa.VFMA_VS:
-                    v = v.at[ins.vd].set(
-                        q(s[ins.vs_scalar] * v[ins.vb] + v[ins.vd], sew))
+                    v = W(v, ins.vd,
+                          q(s[ins.vs_scalar] * R(ins.vb) + R(ins.vd), sew))
                 elif t is isa.VFADD:
-                    v = v.at[ins.vd].set(q(v[ins.va] + v[ins.vb], sew))
+                    v = W(v, ins.vd, q(R(ins.va) + R(ins.vb), sew))
                 elif t is isa.VFMUL:
-                    v = v.at[ins.vd].set(q(v[ins.va] * v[ins.vb], sew))
+                    v = W(v, ins.vd, q(R(ins.va) * R(ins.vb), sew))
                 elif t is isa.VFWMUL:
-                    v = v.at[ins.vd].set(
-                        q(v[ins.va] * v[ins.vb], _wide_bits(sew)))
+                    v = W(v, ins.vd,
+                          q(R(ins.va) * R(ins.vb), _wide_bits(sew)))
                 elif t is isa.VFWMA:
-                    v = v.at[ins.vd].set(
-                        q(v[ins.va] * v[ins.vb] + v[ins.vd],
-                          _wide_bits(sew)))
+                    v = W(v, ins.vd, q(R(ins.va) * R(ins.vb) + R(ins.vd),
+                                       _wide_bits(sew)))
                 elif t is isa.VFNCVT:
-                    v = v.at[ins.vd].set(q(v[ins.vs], sew))
+                    v = W(v, ins.vd, q(R(ins.vs), sew))
                 elif t is isa.VADD:
-                    v = v.at[ins.vd].set(q(v[ins.va] + v[ins.vb], sew))
+                    v = W(v, ins.vd, q(R(ins.va) + R(ins.vb), sew))
                 elif t is isa.VINS:
-                    v = v.at[ins.vd].set(
-                        q(jnp.full((e_max,), s[ins.scalar], self.dtype),
-                          sew))
+                    v = W(v, ins.vd,
+                          q(jnp.full((nsl,), s[ins.scalar], self.dtype),
+                            sew))
                 elif t is isa.VEXT:
-                    mask, ids = owned_mask(vl)
                     hit = (ids == ins.idx) & mask
-                    val = jax.lax.psum(jnp.sum(jnp.where(hit, v[ins.vs], 0)),
-                                       self.axis)           # SLDU extract
+                    val = jax.lax.psum(
+                        jnp.sum(jnp.where(hit, R(ins.vs), 0)),
+                        self.axis)                    # SLDU extract
                     s = s.at[ins.sd].set(val)
                 elif t is isa.VSLIDE:
                     # element i <- element i+amount: owner of i+amount is
@@ -289,15 +398,14 @@ class LaneEngine:
                     src_lane_off = k % lanes
                     perm = [((l + src_lane_off) % lanes, l)
                             for l in range(lanes)]
-                    moved = jax.lax.ppermute(v[ins.vs], self.axis, perm)
+                    moved = jax.lax.ppermute(R(ins.vs), self.axis, perm)
                     # received data is lane (lane+k)%lanes's column; its
                     # j-th slot is element (lane+k)%lanes + j*lanes; we need
                     # element lane + i*lanes + k = base + (i + shift)*lanes
                     shift = (lane + src_lane_off) // lanes + k // lanes
                     rolled = jnp.roll(moved, -shift, axis=0)
-                    ids = lane + jnp.arange(e_max) * lanes
                     valid = (ids + k) < vl
-                    v = v.at[ins.vd].set(jnp.where(valid, rolled, 0))
+                    v = W(v, ins.vd, jnp.where(valid, rolled, 0))
                 elif t is isa.LDSCALAR:
                     s = s.at[ins.sd].set(mem[ins.addr])
                 else:
@@ -329,12 +437,16 @@ class TimingReport:
 
 ISSUE_COST = {  # Ariane dispatch slots per instruction (Appendix A)
     isa.VSETVL: 1, isa.VLD: 2, isa.VLDS: 2, isa.VGATHER: 2, isa.VST: 2,
+    isa.VLSEG: 2, isa.VSSEG: 2, isa.VLUXEI: 2, isa.VSUXEI: 2,
     isa.VFMA: 1, isa.VFMA_VS: 1, isa.VFADD: 1, isa.VFMUL: 1, isa.VADD: 1,
     isa.VFWMUL: 1, isa.VFWMA: 1, isa.VFNCVT: 1,
     isa.VINS: 1, isa.VEXT: 1, isa.VSLIDE: 1, isa.LDSCALAR: 3,
 }
 
 _WIDENING = (isa.VFWMUL, isa.VFWMA)
+_ELEMENT_GRANULAR = (isa.VLDS, isa.VGATHER, isa.VLUXEI, isa.VSUXEI)
+_MEM_OPS = (isa.VLD, isa.VLDS, isa.VGATHER, isa.VST,
+            isa.VLSEG, isa.VSSEG, isa.VLUXEI, isa.VSUXEI)
 
 
 def simulate_timing(program, cfg: AraConfig,
@@ -349,54 +461,37 @@ def simulate_timing(program, cfg: AraConfig,
     reg_start = {}          # vreg -> exec start (chaining reference)
     reg_end = {}
     sreg_end = {}
-    vl, sew = vlmax64, 64
-
-    def vdeps(ins):
-        t = type(ins)
-        if t in (isa.VFMA, isa.VFWMA):
-            return [ins.va, ins.vb, ins.vd]
-        if t is isa.VFMA_VS:
-            return [ins.vb, ins.vd]
-        if t in (isa.VFADD, isa.VFMUL, isa.VADD, isa.VFWMUL):
-            return [ins.va, ins.vb]
-        if t is isa.VST:
-            return [ins.vs]
-        if t in (isa.VSLIDE, isa.VEXT, isa.VFNCVT):
-            return [ins.vs]
-        if t is isa.VGATHER:
-            return [ins.vidx]
-        return []
-
-    def vdst(ins):
-        return getattr(ins, "vd", None)
+    vl, sew, lmul = vlmax64, 64, 1
 
     cycles = 0.0
     n = 0
     for ins in program:
         n += 1
         t = type(ins)
+        isa.check_insn(ins, sew, lmul)
         issue_t += ISSUE_COST.get(t, 1)
         if t is isa.VSETVL:
-            if ins.sew not in isa.SEWS:
-                raise ValueError(f"unsupported SEW {ins.sew}")
-            sew = ins.sew
-            vl = min(ins.vl, vlmax64 * (64 // sew))
+            sew, lmul = ins.sew, ins.lmul
+            vl = min(ins.vl, vlmax64 * (64 // sew) * lmul)
             continue
+        # one grouped instruction covers up to lmul * vlmax elements: the
+        # per-element share of the issue slot shrinks by LMUL (§IV), which
+        # is the whole point of register grouping
         e = max(vl / lanes, 1.0)
         # the 64-bit datapath subdivides 64/SEW ways (§III-E4): FPU and
         # SLDU retire ways elements/lane/cycle; widening ops produce
         # 2*SEW-wide results so they run at the wide width's rate
-        if t in _WIDENING and sew == 64:
-            raise ValueError(
-                "widening op illegal at SEW=64 (2*SEW exceeds ELEN=64)")
         ways = 64 // sew
         ways_w = max(ways // 2, 1)
         # (occupancy, latency): back-to-back bursts pipeline at occupancy
         # rate; startup/collection latency delays only dependants
-        if t in (isa.VLD, isa.VLDS, isa.VGATHER, isa.VST):
-            occ = (sew / 8.0) * vl / bw
-            if t in (isa.VLDS, isa.VGATHER):
+        if t in _MEM_OPS:
+            if t in _ELEMENT_GRANULAR:
                 occ = float(vl)           # element-granular, no burst
+            elif t in (isa.VLSEG, isa.VSSEG):
+                occ = float(vl * ins.nf)  # field walk per element
+            else:
+                occ = (sew / 8.0) * vl / bw
             unit, lat = "vlsu", occ + L_MEM + C_MEM_LANE * lanes
         elif t is isa.LDSCALAR:
             unit, occ, lat = "scalar", 1.0, 2.0
@@ -407,10 +502,12 @@ def simulate_timing(program, cfg: AraConfig,
             unit = "fpu"
             occ = e / (ways_w if t in _WIDENING else ways)
             lat = occ + CHAIN_LAG
+        reads, writes = isa.reg_groups(ins, lmul)
         dep_start = 0.0
-        for r in vdeps(ins):
-            if r in reg_start:
-                dep_start = max(dep_start, reg_start[r] + CHAIN_LAG)
+        for base, span in reads:
+            for r in range(base, base + span):
+                if r in reg_start:
+                    dep_start = max(dep_start, reg_start[r] + CHAIN_LAG)
         if t is isa.VINS or t is isa.VFMA_VS:
             sid = getattr(ins, "scalar", getattr(ins, "vs_scalar", None))
             if sid in sreg_end:
@@ -419,10 +516,10 @@ def simulate_timing(program, cfg: AraConfig,
         end = start + lat
         unit_free[unit] = start + occ
         busy[unit] += occ
-        d = vdst(ins)
-        if d is not None:
-            reg_start[d] = start
-            reg_end[d] = end
+        for base, span in writes:
+            for r in range(base, base + span):
+                reg_start[r] = start
+                reg_end[r] = end
         if t is isa.LDSCALAR:
             sreg_end[ins.sd] = end
         if t is isa.VEXT:

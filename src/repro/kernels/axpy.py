@@ -13,17 +13,27 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.core.stripmine import lmul_tile
+
 
 def _axpy_kernel(alpha_ref, x_ref, y_ref, o_ref):
     o_ref[...] = alpha_ref[0] * x_ref[...] + y_ref[...]
 
 
-@functools.partial(jax.jit, static_argnames=("block", "interpret"))
-def axpy(alpha, x, y, *, block: int = 64 * 1024, interpret: bool = False):
-    """alpha scalar; x, y (n,) -> alpha*x + y."""
+@functools.partial(jax.jit, static_argnames=("block", "interpret", "lmul"))
+def axpy(alpha, x, y, *, block: int = 64 * 1024, interpret: bool = False,
+         lmul: int = 1):
+    """alpha scalar; x, y (n,) -> alpha*x + y.
+
+    ``lmul`` is the register-grouping analogue: the strip each grid step
+    streams grows by LMUL×, so per-step dispatch overhead amortizes like
+    Ara2's grouped vectors amortize the issue interval.
+    """
     n = x.shape[0]
-    block = min(block, n)
-    assert n % block == 0, (n, block)
+    # the base block must tile n exactly (loud failure, as before lmul);
+    # grouping then only ever widens it to a larger divisor
+    assert n % min(block, n) == 0, (n, block)
+    block = lmul_tile(n, block, lmul)
     alpha = jnp.asarray(alpha, x.dtype).reshape(1)
     return pl.pallas_call(
         _axpy_kernel,

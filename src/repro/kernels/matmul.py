@@ -19,6 +19,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core.stripmine import lmul_tile
+
 
 def _matmul_kernel(a_ref, b_ref, o_ref, acc_ref, *, n_k: int):
     k = pl.program_id(2)
@@ -36,21 +38,30 @@ def _matmul_kernel(a_ref, b_ref, o_ref, acc_ref, *, n_k: int):
 
 
 @functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret",
-                                             "out_dtype"))
+                                             "out_dtype", "lmul"))
 def matmul(a, b, *, bm: int = 128, bn: int = 128, bk: int = 128,
-           interpret: bool = False, out_dtype=None):
+           interpret: bool = False, out_dtype=None, lmul: int = 1):
     """a (M,K) @ b (K,N) -> (M,N), fp32 accumulation.
 
     Multi-precision path (§III-E4 analogue): feed bf16/f16 inputs for the
     MXU's doubled rate; the VMEM accumulator stays fp32 regardless, and
     ``out_dtype`` (default: a's dtype) picks the final narrowing — i.e.
     Ara's VFWMA + VFNCVT pair expressed as one kernel.
+
+    ``lmul`` (register-grouping analogue) widens the N block: one grid
+    step then streams an LMUL× longer row vector through the MXU — the
+    paper's longer chains per issued instruction, so the K-loop's per-step
+    overhead amortizes over more elements.
     """
     out_dtype = a.dtype if out_dtype is None else out_dtype
     m, k = a.shape
     k2, n = b.shape
     assert k == k2, (a.shape, b.shape)
-    bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
+    bm, bk = min(bm, m), min(bk, k)
+    # the base block must tile N exactly (loud failure, as before lmul);
+    # grouping then only ever widens it to a larger divisor
+    assert n % min(bn, n) == 0, (n, bn)
+    bn = lmul_tile(n, bn, lmul)
     assert m % bm == 0 and n % bn == 0 and k % bk == 0, (m, n, k, bm, bn, bk)
     n_k = k // bk
     grid = (m // bm, n // bn, n_k)

@@ -9,6 +9,9 @@ inputs are cast to ``policy.compute_dtype`` before the kernel, so bf16/f16
 compute with fp32 in-kernel accumulation is one kwarg away. This is the
 same Policy the analytical perf model consults, keeping the TPU kernels
 and the Ara datapath-split model on one source of per-precision truth.
+``policy.lmul`` likewise flows into the matmul/axpy block-shape pick
+(core.stripmine.lmul_tile) unless the caller passes ``lmul=`` explicitly —
+register grouping and element width travel together, as in vsetvl.
 """
 from __future__ import annotations
 
@@ -36,12 +39,16 @@ def _cast(policy, *arrays):
 
 def matmul(a, b, *, policy: Policy | None = None, **kw):
     kw.setdefault("interpret", _default_interpret())
+    if policy is not None:
+        kw.setdefault("lmul", policy.lmul)
     a, b = _cast(policy, a, b)
     return _matmul(a, b, **kw)
 
 
 def axpy(alpha, x, y, *, policy: Policy | None = None, **kw):
     kw.setdefault("interpret", _default_interpret())
+    if policy is not None:
+        kw.setdefault("lmul", policy.lmul)
     x, y = _cast(policy, x, y)
     return _axpy(alpha, x, y, **kw)
 

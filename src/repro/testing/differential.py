@@ -1,0 +1,340 @@
+"""Cross-engine differential test harness (SEW × LMUL random programs).
+
+The repo's correctness story for the vector model is differential: three
+independent executors of core/isa.py — the jnp ``ReferenceEngine``, the
+shard_map ``LaneEngine``, and the dead-simple numpy oracle here — must
+agree on every legal program. This module packages the pieces so any test
+(or CI job, or future engine) can run the contract:
+
+- ``numpy_oracle``: an intentionally naive numpy executor (python loops
+  where that is the clearest spelling, e.g. the scatter's
+  highest-element-wins rule). It shares nothing with the engines except
+  ``isa.check_insn``, which is the point.
+- ``random_program``: legal-by-construction program generator over the
+  full SEW × LMUL × op-set grid — alignment-aware register allocation,
+  widening/narrowing only where EMUL permits, segment fields bounded by
+  ``nf * lmul <= 8``. Out-of-bounds indexed accesses are deliberately
+  *allowed*: clamp + highest-element-wins makes them deterministic, so
+  the differential contract covers them too.
+- ``run_pair``: drive N programs through two executors and compare memory
+  and scalar-register results. On mismatch the failing (sew, lmul, seed)
+  triple is written to ``$DIFFERENTIAL_SEED_FILE`` (if set — CI uploads
+  it as an artifact) and the assertion names it, so any failure is
+  reproducible from the log alone.
+
+Programs fix one vtype up front (plus the generator may not re-vsetvl):
+cross-vtype register reinterpretation is deliberately exercised by the
+dedicated tests instead, where the expected layout is spelled out.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Callable, Iterable, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import isa
+
+SEW_NP = {64: np.float64, 32: np.float32, 16: np.float16}
+
+# storage is f32 for the in-process pair; f16 rounding dominates its tol
+TOL = {64: 1e-5, 32: 1e-5, 16: 1e-2}
+
+MEM_WORDS = 2048      # oracle/program memory size (elements)
+INT_REGION = 256      # mem[:INT_REGION] holds small ints (index material)
+VLMAX64 = 8           # default per-register 64-bit VLMAX for the grid
+
+DEFAULT_OPS = ("vfma", "vfma_vs", "vfadd", "vfmul", "vadd", "vins", "vld",
+               "vlds", "vgather", "vluxei", "vst", "vsuxei", "vlseg",
+               "vsseg", "vslide", "vext", "ldscalar", "vfwmul", "vfwma",
+               "vfncvt")
+
+
+# ---------------------------------------------------------------------------
+# numpy oracle
+# ---------------------------------------------------------------------------
+
+
+def numpy_oracle(program, memory, vlmax64: int, sregs: Optional[dict] = None,
+                 storage=np.float32):
+    """Independent executor of the ISA semantics; see module docstring."""
+    mem = np.asarray(memory, storage).copy()
+    n_elems = vlmax64 * (64 // min(isa.SEWS))
+    v = np.zeros((isa.NUM_VREGS, n_elems), storage)
+    s = dict(sregs or {})
+    vl, sew, lmul = vlmax64, 64, 1
+
+    def q(x, bits):
+        dt = np.dtype(SEW_NP[bits])
+        if dt.itemsize >= np.dtype(storage).itemsize:
+            return np.asarray(x, storage)
+        return np.asarray(x).astype(dt).astype(storage)
+
+    for ins in program:
+        t = type(ins)
+        isa.check_insn(ins, sew, lmul)
+        vpr = vlmax64 * (64 // sew)          # per-register capacity
+
+        def R(reg):
+            if vl <= vpr:
+                return v[reg, :vl]
+            return np.concatenate(
+                [v[reg + g, :vpr] for g in range(lmul)])[:vl]
+
+        def W(reg, vals):
+            if vl <= vpr:
+                v[reg, :vl] = vals
+                return
+            for g in range(lmul):
+                lo = g * vpr
+                if lo >= vl:
+                    break
+                hi = min(vl, lo + vpr)
+                v[reg + g, :hi - lo] = vals[lo:hi]
+
+        if t is isa.VSETVL:
+            sew, lmul = ins.sew, ins.lmul
+            vl = min(ins.vl, vlmax64 * (64 // sew) * lmul)
+        elif t is isa.VLD:
+            W(ins.vd, q(mem[ins.addr:ins.addr + vl], sew))
+        elif t is isa.VLDS:
+            idx = ins.addr + ins.stride * np.arange(vl)
+            W(ins.vd, q(mem[idx], sew))
+        elif t in (isa.VGATHER, isa.VLUXEI):
+            idx = ins.addr + R(ins.vidx).astype(np.int32)
+            idx = np.clip(idx, 0, mem.shape[0] - 1)
+            W(ins.vd, q(mem[idx], sew))
+        elif t is isa.VLSEG:
+            base = ins.addr + ins.nf * np.arange(vl)
+            for f in range(ins.nf):
+                W(ins.vd + f * lmul, q(mem[base + f], sew))
+        elif t is isa.VST:
+            mem[ins.addr:ins.addr + vl] = R(ins.vs)
+        elif t is isa.VSSEG:
+            base = ins.addr + ins.nf * np.arange(vl)
+            for f in range(ins.nf):
+                mem[base + f] = R(ins.vs + f * lmul)
+        elif t is isa.VSUXEI:
+            idx = ins.addr + R(ins.vidx).astype(np.int32)
+            idx = np.clip(idx, 0, mem.shape[0] - 1)
+            vals = np.asarray(R(ins.vs), storage)
+            for i in range(vl):              # element order: last one wins
+                mem[idx[i]] = vals[i]
+        elif t is isa.VFMA:
+            W(ins.vd, q(R(ins.va) * R(ins.vb) + R(ins.vd), sew))
+        elif t is isa.VFMA_VS:
+            W(ins.vd, q(storage(s[ins.vs_scalar]) * R(ins.vb) + R(ins.vd),
+                        sew))
+        elif t is isa.VFADD:
+            W(ins.vd, q(R(ins.va) + R(ins.vb), sew))
+        elif t is isa.VFMUL:
+            W(ins.vd, q(R(ins.va) * R(ins.vb), sew))
+        elif t is isa.VFWMUL:
+            W(ins.vd, q(R(ins.va) * R(ins.vb), 2 * sew))
+        elif t is isa.VFWMA:
+            W(ins.vd, q(R(ins.va) * R(ins.vb) + R(ins.vd), 2 * sew))
+        elif t is isa.VFNCVT:
+            W(ins.vd, q(R(ins.vs), sew))
+        elif t is isa.VADD:
+            W(ins.vd, q(R(ins.va) + R(ins.vb), sew))
+        elif t is isa.VINS:
+            W(ins.vd, q(np.full(vl, s[ins.scalar], storage), sew))
+        elif t is isa.VEXT:
+            s[ins.sd] = R(ins.vs)[ins.idx]
+        elif t is isa.VSLIDE:
+            src = R(ins.vs)
+            out = np.zeros(vl, storage)
+            out[:vl - ins.amount] = src[ins.amount:vl]
+            W(ins.vd, out)
+        elif t is isa.LDSCALAR:
+            s[ins.sd] = mem[ins.addr]
+        else:
+            raise ValueError(ins)
+    return mem, s
+
+
+# ---------------------------------------------------------------------------
+# random program generator (legal by construction)
+# ---------------------------------------------------------------------------
+
+
+def random_program(r: np.random.RandomState, sew: int = 64, lmul: int = 1,
+                   n_ops: int = 14, vlmax64: int = VLMAX64,
+                   ops: Sequence[str] = DEFAULT_OPS,
+                   mem_words: Optional[int] = None):
+    """Build (program, memory, sregs) legal at the given vtype.
+
+    Register allocation is LMUL-aligned: work groups are the aligned bases
+    except the last, which holds the index vector for gathers/scatters.
+    Widening picks a 2*LMUL-aligned destination whose reserved span avoids
+    both sources; segment ops bound their field span by the register file.
+    """
+    isa.check_vtype(sew, lmul)
+    vlmax = vlmax64 * (64 // sew) * lmul
+    # bias toward multi-register vl so grouping is actually exercised
+    vl = int(r.randint(max(2, vlmax // 2), vlmax + 1))
+    # memory scales with the grid point: room for nf<=4 segment fields
+    # plus slack, whatever vlmax64 the caller picked
+    mem_words = max(mem_words or MEM_WORDS, 8 * vlmax)
+    int_region = min(INT_REGION, mem_words // 4)
+    mem = r.uniform(-1, 1, mem_words)
+    mem[:int_region] = r.randint(0, 8, int_region)
+    sregs = {0: float(np.float32(r.uniform(-2, 2)))}
+
+    bases = list(range(0, isa.NUM_VREGS, lmul))
+    idx_grp = bases[-1]                       # gather/scatter index vector
+    work = bases[:-1][:8]
+    wide_bases = [b for b in range(0, isa.NUM_VREGS - 2 * lmul + 1,
+                                   2 * lmul)]
+
+    def reg():
+        return work[r.randint(len(work))]
+
+    def wide_pair():
+        """(wide dest, two sources outside its reserved span)."""
+        for _ in range(32):
+            d = wide_bases[r.randint(len(wide_bases))]
+            free = [b for b in work if b + lmul <= d or b >= d + 2 * lmul]
+            if len(free) >= 1:
+                return d, free[r.randint(len(free))], \
+                    free[r.randint(len(free))]
+        return None
+
+    prog = [isa.VSETVL(vl, sew, lmul), isa.VLD(idx_grp, 0)]
+    for vr in work[:4]:                       # seed a few live registers
+        prog.append(isa.VLD(vr, int(r.randint(int_region,
+                                              mem_words - vl))))
+    pool = [op for op in ops]
+    if sew == max(isa.SEWS) or 2 * lmul > max(isa.LMULS):
+        pool = [op for op in pool
+                if op not in ("vfwmul", "vfwma", "vfncvt")]
+    if 2 * lmul > max(isa.LMULS):             # no room for nf >= 2 fields
+        pool = [op for op in pool if op not in ("vlseg", "vsseg")]
+
+    for _ in range(n_ops):
+        op = pool[r.randint(len(pool))]
+        if op == "vfma":
+            prog.append(isa.VFMA(reg(), reg(), reg()))
+        elif op == "vfma_vs":
+            prog.append(isa.VFMA_VS(reg(), 0, reg()))
+        elif op == "vfadd":
+            prog.append(isa.VFADD(reg(), reg(), reg()))
+        elif op == "vfmul":
+            prog.append(isa.VFMUL(reg(), reg(), reg()))
+        elif op == "vadd":
+            prog.append(isa.VADD(reg(), reg(), reg()))
+        elif op == "vins":
+            prog.append(isa.VINS(reg(), 0))
+        elif op == "vld":
+            prog.append(isa.VLD(reg(), int(r.randint(0, mem_words - vl))))
+        elif op == "vlds":
+            stride = int(r.randint(1, 4))
+            hi = mem_words - stride * (vl - 1) - 1
+            prog.append(isa.VLDS(reg(), int(r.randint(0, hi)), stride))
+        elif op in ("vgather", "vluxei"):
+            # index values are small ints (or clamped float garbage after
+            # scatters hit the region) — both are deterministic
+            cls = isa.VGATHER if op == "vgather" else isa.VLUXEI
+            prog.append(cls(reg(), int(r.randint(0, mem_words - 8)),
+                            idx_grp))
+        elif op == "vst":
+            prog.append(isa.VST(reg(), int(r.randint(0, mem_words - vl))))
+        elif op == "vsuxei":
+            prog.append(isa.VSUXEI(reg(), int(r.randint(0, mem_words - 8)),
+                                   idx_grp))
+        elif op in ("vlseg", "vsseg"):
+            nf = int(r.randint(2, min(4, max(isa.LMULS) // lmul) + 1))
+            base = [b for b in work if b + nf * lmul <= idx_grp]
+            if not base:
+                continue
+            vd = base[r.randint(len(base))]
+            addr = int(r.randint(0, mem_words - nf * vl))
+            cls = isa.VLSEG if op == "vlseg" else isa.VSSEG
+            prog.append(cls(vd, addr, nf))
+        elif op == "vslide":
+            prog.append(isa.VSLIDE(reg(), reg(), int(r.randint(0, vl))))
+        elif op == "vext":
+            prog.append(isa.VEXT(int(r.randint(1, 4)), reg(),
+                                 int(r.randint(0, vl))))
+        elif op == "ldscalar":
+            prog.append(isa.LDSCALAR(0, int(r.randint(0, mem_words))))
+        elif op == "vfwmul" or op == "vfwma":
+            picked = wide_pair()
+            if picked is None:
+                continue
+            d, a, b = picked
+            cls = isa.VFWMUL if op == "vfwmul" else isa.VFWMA
+            prog.append(cls(d, a, b))
+        elif op == "vfncvt":
+            src = wide_bases[r.randint(len(wide_bases))]
+            dst = [b for b in work
+                   if b + lmul <= src or b >= src + 2 * lmul or b == src]
+            if not dst:
+                continue
+            prog.append(isa.VFNCVT(dst[r.randint(len(dst))], src))
+    return isa.validate_program(prog), mem, sregs
+
+
+# ---------------------------------------------------------------------------
+# differential runner
+# ---------------------------------------------------------------------------
+
+
+def grid(n_programs: int, sews: Sequence[int] = isa.SEWS,
+         lmuls: Sequence[int] = isa.LMULS,
+         seed0: int = 0) -> Iterable[Tuple[int, int, int]]:
+    """(sew, lmul, seed) triples cycling the vtype grid, distinct seeds."""
+    combos = [(s, l) for s in sews for l in lmuls]
+    for i in range(n_programs):
+        sew, lmul = combos[i % len(combos)]
+        yield sew, lmul, seed0 + i
+
+
+def record_failure(sew: int, lmul: int, seed: int,
+                   path: Optional[str] = None) -> Optional[str]:
+    """Persist a failing grid point for CI artifact upload."""
+    path = path or os.environ.get("DIFFERENTIAL_SEED_FILE")
+    if not path:
+        return None
+    with open(path, "w") as f:
+        json.dump({"sew": sew, "lmul": lmul, "seed": seed,
+                   "repro": "repro.testing.differential.random_program("
+                            f"np.random.RandomState({seed}), sew={sew}, "
+                            f"lmul={lmul})"}, f, indent=2)
+    return path
+
+
+def run_pair(run_a: Callable, run_b: Callable, n_programs: int,
+             sews: Sequence[int] = isa.SEWS,
+             lmuls: Sequence[int] = isa.LMULS, seed0: int = 0,
+             n_ops: int = 14, vlmax64: int = VLMAX64,
+             tol: Optional[dict] = None, label: str = "differential"):
+    """Run ``n_programs`` random programs through two executors.
+
+    ``run_a`` / ``run_b``: (program, memory, sregs) -> (mem, sregs_out).
+    Compares memory exactly to ``tol[sew]`` and scalar registers on the
+    keys both report. Returns the number of programs checked.
+    """
+    tol = tol or TOL
+    checked = 0
+    for sew, lmul, seed in grid(n_programs, sews, lmuls, seed0):
+        r = np.random.RandomState(seed)
+        prog, mem, sregs = random_program(r, sew, lmul, n_ops=n_ops,
+                                          vlmax64=vlmax64)
+        try:
+            mem_a, s_a = run_a(prog, mem, dict(sregs))
+            mem_b, s_b = run_b(prog, mem, dict(sregs))
+            np.testing.assert_allclose(mem_a, mem_b, rtol=tol[sew],
+                                       atol=tol[sew])
+            for k in set(s_a) & set(s_b):
+                np.testing.assert_allclose(float(s_a[k]), float(s_b[k]),
+                                           rtol=tol[sew], atol=tol[sew])
+        except Exception as e:
+            where = record_failure(sew, lmul, seed)
+            note = f" (seed file: {where})" if where else ""
+            raise AssertionError(
+                f"{label}: engines disagree at sew={sew} lmul={lmul} "
+                f"seed={seed}{note}: {e}") from e
+        checked += 1
+    return checked

@@ -1,0 +1,117 @@
+"""Cross-engine differential tests over the full SEW × LMUL grid.
+
+Drives repro.testing.differential (the reusable harness extracted from the
+PR-1 multiprecision tests) across engine pairs:
+
+- ReferenceEngine vs numpy oracle: in-process and cheap (~0.6 s/program),
+  so tier-1 runs the acceptance-scale grid (>= 200 random programs).
+- LaneEngine vs ReferenceEngine: each random program traces a fresh
+  shard_map graph, and XLA compile dominates (~10-20 s/program on CPU),
+  so tier-1 covers every SEW × LMUL combination once per run and the
+  ``REPRO_DIFFERENTIAL_LANE_N`` env var scales the same grid to the full
+  200+ programs where wall-clock allows (scheduled CI, local soaks).
+
+Failures are reproducible from the log alone: run_pair names the
+(sew, lmul, seed) triple and, when ``DIFFERENTIAL_SEED_FILE`` is set
+(CI does), writes it to disk for artifact upload.
+"""
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.ara import AraConfig
+from repro.core import isa
+from repro.core.vector_engine import ReferenceEngine
+from repro.testing import differential as diff
+from conftest import run_devices
+
+N_ORACLE_PROGRAMS = 204          # >= 200: the acceptance-scale grid
+GRID_COMBOS = len(isa.SEWS) * len(isa.LMULS)
+
+
+def test_reference_vs_oracle_grid():
+    """>= 200 random SEW × LMUL programs: jnp engine == numpy oracle."""
+    cfg = AraConfig(lanes=2)
+    eng = ReferenceEngine(cfg, vlmax=diff.VLMAX64, dtype=jnp.float32)
+    checked = diff.run_pair(
+        lambda p, m, s: eng.run(p, m, sregs=s),
+        lambda p, m, s: diff.numpy_oracle(p, m, diff.VLMAX64, sregs=s),
+        N_ORACLE_PROGRAMS, label="reference-vs-oracle")
+    assert checked >= 200
+
+
+def test_lane_vs_reference_grid():
+    """shard_map LaneEngine == ReferenceEngine on every SEW × LMUL combo.
+
+    One subprocess (fake devices), exact (x64) tolerance. Program count
+    defaults to one per grid combination — compile-bound, see module
+    docstring — and scales via REPRO_DIFFERENTIAL_LANE_N.
+    """
+    n = max(GRID_COMBOS, int(os.environ.get("REPRO_DIFFERENTIAL_LANE_N",
+                                            GRID_COMBOS)))
+    code = f"""
+import numpy as np, jax, jax.numpy as jnp
+from repro.configs.ara import AraConfig
+from repro.core.vector_engine import ReferenceEngine, LaneEngine
+from repro.testing import differential as diff
+cfg = AraConfig(lanes=2)
+mesh = jax.sharding.Mesh(np.array(jax.devices()[:2]), ("lanes",))
+ref = ReferenceEngine(cfg, vlmax=diff.VLMAX64)
+lane = LaneEngine(cfg, mesh, vlmax=diff.VLMAX64, dtype=jnp.float64)
+tol = {{64: 1e-12, 32: 1e-12, 16: 1e-12}}
+checked = diff.run_pair(
+    lambda p, m, s: ref.run(p, m, sregs=s),
+    lambda p, m, s: lane.run(p, m, sregs=s),
+    {n}, n_ops=8, tol=tol, label="lane-vs-reference")
+print("LANE_DIFF_OK", checked)
+"""
+    out = run_devices(code, n_devices=2, x64=True,
+                      timeout=600 + 30 * n)
+    assert f"LANE_DIFF_OK {n}" in out
+
+
+def test_generator_programs_are_legal_and_diverse():
+    """Every grid point yields validate_program-clean programs, and the
+    op pool respects the vtype: no widening at SEW=64 or LMUL=8, no
+    segment fields at LMUL=8, grouping exercised (vl spans registers)."""
+    for sew in isa.SEWS:
+        for lmul in isa.LMULS:
+            kinds = set()
+            for seed in range(6):
+                r = np.random.RandomState(seed)
+                prog, mem, sregs = diff.random_program(r, sew, lmul)
+                isa.validate_program(prog)       # would raise if illegal
+                kinds |= {type(i).__name__ for i in prog}
+                vl = prog[0].vl
+                assert vl <= diff.VLMAX64 * (64 // sew) * lmul
+                if lmul > 1:
+                    # bias guarantees multi-register groups get exercised
+                    assert vl >= diff.VLMAX64 * (64 // sew) * lmul // 2
+            if sew == 64 or lmul == 8:
+                assert not kinds & {"VFWMUL", "VFWMA", "VFNCVT"}
+            if lmul == 8:
+                assert not kinds & {"VLSEG", "VSSEG"}
+
+
+def test_run_pair_reports_and_records_failing_seed(tmp_path, monkeypatch):
+    """A disagreeing pair fails with the (sew, lmul, seed) triple in the
+    message and writes the seed file CI uploads."""
+    seed_file = tmp_path / "differential-failure.json"
+    monkeypatch.setenv("DIFFERENTIAL_SEED_FILE", str(seed_file))
+
+    def good(p, m, s):
+        return diff.numpy_oracle(p, m, diff.VLMAX64, sregs=s)
+
+    def bad(p, m, s):
+        mem, sr = diff.numpy_oracle(p, m, diff.VLMAX64, sregs=s)
+        return mem + 1.0, sr
+
+    with pytest.raises(AssertionError) as e:
+        diff.run_pair(good, bad, 1, sews=(32,), lmuls=(2,), seed0=7)
+    assert "sew=32 lmul=2 seed=7" in str(e.value)
+    assert seed_file.exists()
+    import json
+    rec = json.loads(seed_file.read_text())
+    assert (rec["sew"], rec["lmul"], rec["seed"]) == (32, 2, 7)

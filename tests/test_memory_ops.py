@@ -1,0 +1,193 @@
+"""Property tests for the VLSU's segment and indexed ops (vlseg/vluxei/
+vsuxei/vsseg) at every SEW × LMUL, against numpy-constructed expectations.
+
+Covers the ISSUE-2 memory-path contract:
+- segment round-trip: VLSEG deinterleaves an nf-field AoS into nf register
+  groups; VSSEG reinterleaves — a load/store round-trip reproduces memory
+  (to SEW rounding).
+- indexed round-trip: VLUXEI gathers exactly mem[addr + idx] (== VGATHER,
+  the RVV-0.5 spelling it generalizes); VSUXEI scatters back.
+- out-of-bounds clamp: indexed addresses pin to the memory edges — the
+  same semantics VGATHER established in PR 1 — and colliding scatters
+  resolve highest-element-index-wins, deterministically.
+- grouping: at LMUL > 1 a vl spanning multiple registers round-trips
+  through the flat group view.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.ara import AraConfig
+from repro.core import isa
+from repro.core.vector_engine import ReferenceEngine, simulate_timing
+from repro.testing.differential import SEW_NP, TOL
+
+CFG = AraConfig(lanes=2)
+VLMAX64 = 8
+
+
+def _engine():
+    return ReferenceEngine(CFG, vlmax=VLMAX64, dtype=jnp.float32)
+
+
+def _rounded(x, sew):
+    return np.asarray(x).astype(SEW_NP[sew]).astype(np.float32)
+
+
+@settings(max_examples=24, deadline=None)
+@given(sew=st.sampled_from(list(isa.SEWS)),
+       lmul=st.sampled_from([1, 2, 4]),
+       nf=st.integers(2, 3), seed=st.integers(0, 999))
+def test_vlseg_vsseg_roundtrip(sew, lmul, nf, seed):
+    """Deinterleave nf fields, re-interleave elsewhere: AoS preserved."""
+    if nf * lmul > max(isa.LMULS):
+        nf = max(isa.LMULS) // lmul
+    r = np.random.RandomState(seed)
+    vl = VLMAX64 * (64 // sew) * lmul          # full group
+    mem = np.zeros(2 * nf * vl + 16)
+    mem[:nf * vl] = r.uniform(-1, 1, nf * vl)
+    prog = [isa.VSETVL(vl, sew, lmul),
+            isa.VLSEG(0, 0, nf),
+            isa.VSSEG(0, nf * vl + 16, nf)]
+    out, _ = _engine().run(prog, mem)
+    want = _rounded(mem[:nf * vl], sew)
+    np.testing.assert_allclose(out[nf * vl + 16:], want,
+                               rtol=TOL[sew], atol=TOL[sew])
+
+
+@settings(max_examples=24, deadline=None)
+@given(sew=st.sampled_from(list(isa.SEWS)),
+       lmul=st.sampled_from(list(isa.LMULS)), seed=st.integers(0, 999))
+def test_vlseg_field_extraction_matches_numpy(sew, lmul, seed):
+    """Each field group holds the strided numpy slice mem[f::nf]."""
+    nf = 2 if lmul <= 4 else 1
+    if nf < 2:
+        return                                  # no room for fields
+    r = np.random.RandomState(seed)
+    vl = max(2, VLMAX64 * (64 // sew) * lmul // 2)
+    mem = np.zeros(nf * vl + 2 * vl + 8)
+    mem[:nf * vl] = r.uniform(-1, 1, nf * vl)
+    store0, store1 = nf * vl, nf * vl + vl + 4
+    prog = [isa.VSETVL(vl, sew, lmul),
+            isa.VLSEG(0, 0, nf),
+            isa.VST(0, store0),                 # field 0
+            isa.VST(lmul, store1)]              # field 1
+    out, _ = _engine().run(prog, mem)
+    np.testing.assert_allclose(out[store0:store0 + vl],
+                               _rounded(mem[0:nf * vl:nf], sew),
+                               rtol=TOL[sew], atol=TOL[sew])
+    np.testing.assert_allclose(out[store1:store1 + vl],
+                               _rounded(mem[1:nf * vl:nf], sew),
+                               rtol=TOL[sew], atol=TOL[sew])
+
+
+@settings(max_examples=24, deadline=None)
+@given(sew=st.sampled_from(list(isa.SEWS)),
+       lmul=st.sampled_from(list(isa.LMULS)), seed=st.integers(0, 999))
+def test_vluxei_vsuxei_roundtrip(sew, lmul, seed):
+    """Gather by a permutation index, scatter back by the same index:
+    identity (to SEW rounding) — at every SEW × LMUL."""
+    r = np.random.RandomState(seed)
+    vl = VLMAX64 * (64 // sew) * lmul
+    perm = r.permutation(vl)
+    mem = np.zeros(3 * vl + 8)
+    mem[:vl] = perm                            # index vector (exact ints)
+    mem[vl:2 * vl] = r.uniform(-1, 1, vl)      # data
+    idx_grp, data_grp = isa.NUM_VREGS - lmul, 0
+    prog = [isa.VSETVL(vl, sew, lmul),
+            isa.VLD(idx_grp, 0),
+            isa.VLUXEI(data_grp, vl, idx_grp),     # data[perm[i]]
+            isa.VST(data_grp, 2 * vl + 8),
+            isa.VSUXEI(data_grp, vl, idx_grp)]     # scatter back
+    out, _ = _engine().run(prog, mem)
+    data_r = _rounded(mem[vl:2 * vl], sew)
+    np.testing.assert_allclose(out[2 * vl + 8:], data_r[perm],
+                               rtol=TOL[sew], atol=TOL[sew])
+    # scatter inverts the gather: memory returns to its rounded self
+    np.testing.assert_allclose(out[vl:2 * vl], data_r,
+                               rtol=TOL[sew], atol=TOL[sew])
+
+
+@pytest.mark.parametrize("lmul", list(isa.LMULS))
+@pytest.mark.parametrize("sew", list(isa.SEWS))
+def test_indexed_oob_clamps_to_edges(sew, lmul):
+    """OOB indexed loads clamp to mem[0]/mem[-1] — the contract VGATHER
+    established, now shared by VLUXEI (loads) and VSUXEI (stores)."""
+    vl = max(2, VLMAX64 * (64 // sew) * lmul // 2)
+    size = 4 * vl
+    mem = np.arange(size, dtype=float)
+    mem[0], mem[1] = -50.0, 10 * size          # clamps to 0 and size-1
+    idx_grp = isa.NUM_VREGS - lmul
+    prog = [isa.VSETVL(vl, sew, lmul),
+            isa.VLD(idx_grp, 0),
+            isa.VLUXEI(0, 0, idx_grp),
+            isa.VST(0, 2 * vl)]
+    out, _ = _engine().run(prog, mem)
+    np.testing.assert_allclose(out[2 * vl], _rounded(mem[0], sew),
+                               rtol=TOL[sew])
+    np.testing.assert_allclose(out[2 * vl + 1], _rounded(mem[-1], sew),
+                               rtol=TOL[sew])
+    # VGATHER agrees (same clamp path)
+    prog[2] = isa.VGATHER(0, 0, idx_grp)
+    out2, _ = _engine().run(prog, mem)
+    np.testing.assert_allclose(out2[2 * vl:2 * vl + vl],
+                               out[2 * vl:2 * vl + vl])
+
+
+def test_vsuxei_collisions_highest_element_wins():
+    """All elements scatter to one (clamped) address: the last element's
+    value lands — deterministically, matching the oracle's element loop."""
+    vl = 8
+    mem = np.zeros(32)
+    mem[:vl] = 1000.0                          # all indices clamp to edge
+    mem[16:16 + vl] = np.arange(vl, dtype=float) + 1
+    prog = [isa.VSETVL(vl, 64), isa.VLD(2, 0), isa.VLD(4, 16),
+            isa.VSUXEI(4, 0, 2)]
+    out, _ = _engine().run(prog, mem)
+    assert out[31] == vl                       # element vl-1 wins
+    np.testing.assert_allclose(out[16:16 + vl], mem[16:16 + vl])
+
+
+def test_segment_ops_illegal_when_fields_overflow():
+    """nf * lmul > 8 (RVV span rule) raises in engine and scoreboard."""
+    prog = [isa.VSETVL(8, 64, 4), isa.VLSEG(0, 0, 3)]   # 3*4 = 12 > 8
+    with pytest.raises(ValueError):
+        _engine().run(prog, np.zeros(64))
+    with pytest.raises(ValueError):
+        simulate_timing(prog, CFG, vlmax=VLMAX64)
+
+
+def test_misaligned_group_rejected_everywhere():
+    """LMUL-unaligned operands raise in both engines' shared checker and
+    the scoreboard (the RVV alignment rule)."""
+    prog = [isa.VSETVL(8, 64, 2), isa.VFADD(1, 2, 4)]   # v1 not 2-aligned
+    with pytest.raises(ValueError):
+        _engine().run(prog, np.zeros(64))
+    with pytest.raises(ValueError):
+        simulate_timing(prog, CFG, vlmax=VLMAX64)
+    with pytest.raises(ValueError):            # widening overlap rule
+        isa.check_insn(isa.VFWMUL(4, 5, 2), 32, 1)
+    isa.check_insn(isa.VFNCVT(4, 4), 32, 1)    # lowest-part overlap OK
+    with pytest.raises(ValueError):
+        isa.check_insn(isa.VFNCVT(5, 4), 32, 1)
+
+
+def test_scoreboard_times_new_memory_ops():
+    """Segment/indexed ops occupy the VLSU element-granularly: a vlseg of
+    nf fields costs ~nf unit-stride loads' elements; indexed ops cost one
+    element per index — and grouping lengthens both without extra issue
+    slots."""
+    vl = 32
+    base = [isa.VSETVL(vl, 64, 1), isa.VLD(30, 0)]
+    t_seg = simulate_timing(base + [isa.VLSEG(0, 0, 4)], CFG, vlmax=vl)
+    t_uni = simulate_timing(base + [isa.VLD(0, 0)], CFG, vlmax=vl)
+    assert t_seg.unit_busy["vlsu"] > t_uni.unit_busy["vlsu"]
+    t_idx = simulate_timing(base + [isa.VLUXEI(0, 0, 30)], CFG, vlmax=vl)
+    t_sca = simulate_timing(base + [isa.VSUXEI(0, 0, 30)], CFG, vlmax=vl)
+    assert t_idx.unit_busy["vlsu"] == pytest.approx(
+        t_sca.unit_busy["vlsu"])
+    grouped = [isa.VSETVL(8 * vl, 64, 8), isa.VLD(24, 0),
+               isa.VLUXEI(0, 0, 24)]
+    t_grp = simulate_timing(grouped, CFG, vlmax=vl)
+    assert t_grp.unit_busy["vlsu"] > t_idx.unit_busy["vlsu"]

@@ -5,6 +5,11 @@ ReferenceEngine vs an independent numpy oracle (in-process), and
 ReferenceEngine vs LaneEngine (subprocess: needs fake devices) — plus
 scoreboard/perfmodel assertions that halving SEW ≈ doubles FLOP/cycle on
 FPU-bound programs, and Pallas bf16/f16 kernel paths vs the fp32 path.
+
+The oracle and random-program generator live in
+repro.testing.differential (they are the reusable harness tests/
+test_differential.py drives over the full SEW × LMUL grid); this file
+keeps the SEW-focused property tests and the targeted semantics cases.
 """
 import jax.numpy as jnp
 import numpy as np
@@ -17,144 +22,9 @@ from repro.core import perfmodel as pm
 from repro.core import precision
 from repro.core.vector_engine import ReferenceEngine, simulate_timing
 from repro.kernels import ops
+from repro.testing.differential import (SEW_NP, TOL, VLMAX64, numpy_oracle,
+                                        random_program)
 from conftest import run_devices
-
-SEW_NP = {64: np.float64, 32: np.float32, 16: np.float16}
-
-
-# ---------------------------------------------------------------------------
-# numpy oracle: an independent, dead-simple executor of the ISA semantics
-# ---------------------------------------------------------------------------
-
-
-def numpy_oracle(program, memory, vlmax64, sregs=None, storage=np.float32):
-    mem = np.asarray(memory, storage).copy()
-    n_elems = vlmax64 * (64 // min(isa.SEWS))
-    v = np.zeros((isa.NUM_VREGS, n_elems), storage)
-    s = dict(sregs or {})
-    vl, sew = vlmax64, 64
-
-    def q(x, bits):
-        dt = np.dtype(SEW_NP[bits])
-        if dt.itemsize >= np.dtype(storage).itemsize:
-            return np.asarray(x, storage)
-        return np.asarray(x).astype(dt).astype(storage)
-
-    for ins in program:
-        t = type(ins)
-        if t is isa.VSETVL:
-            sew = ins.sew
-            vl = min(ins.vl, vlmax64 * (64 // sew))
-        elif t is isa.VLD:
-            v[ins.vd, :vl] = q(mem[ins.addr:ins.addr + vl], sew)
-        elif t is isa.VLDS:
-            idx = ins.addr + ins.stride * np.arange(vl)
-            v[ins.vd, :vl] = q(mem[idx], sew)
-        elif t is isa.VGATHER:
-            idx = ins.addr + v[ins.vidx, :vl].astype(np.int32)
-            idx = np.clip(idx, 0, mem.shape[0] - 1)
-            v[ins.vd, :vl] = q(mem[idx], sew)
-        elif t is isa.VST:
-            mem[ins.addr:ins.addr + vl] = v[ins.vs, :vl]
-        elif t is isa.VFMA:
-            v[ins.vd, :vl] = q(v[ins.va, :vl] * v[ins.vb, :vl]
-                               + v[ins.vd, :vl], sew)
-        elif t is isa.VFMA_VS:
-            v[ins.vd, :vl] = q(storage(s[ins.vs_scalar]) * v[ins.vb, :vl]
-                               + v[ins.vd, :vl], sew)
-        elif t is isa.VFADD:
-            v[ins.vd, :vl] = q(v[ins.va, :vl] + v[ins.vb, :vl], sew)
-        elif t is isa.VFMUL:
-            v[ins.vd, :vl] = q(v[ins.va, :vl] * v[ins.vb, :vl], sew)
-        elif t is isa.VFWMUL:
-            v[ins.vd, :vl] = q(v[ins.va, :vl] * v[ins.vb, :vl], 2 * sew)
-        elif t is isa.VFWMA:
-            v[ins.vd, :vl] = q(v[ins.va, :vl] * v[ins.vb, :vl]
-                               + v[ins.vd, :vl], 2 * sew)
-        elif t is isa.VFNCVT:
-            v[ins.vd, :vl] = q(v[ins.vs, :vl], sew)
-        elif t is isa.VADD:
-            v[ins.vd, :vl] = q(v[ins.va, :vl] + v[ins.vb, :vl], sew)
-        elif t is isa.VINS:
-            v[ins.vd, :vl] = q(np.full(vl, s[ins.scalar], storage), sew)
-        elif t is isa.VEXT:
-            s[ins.sd] = v[ins.vs, ins.idx]
-        elif t is isa.VSLIDE:
-            out = np.zeros(vl, storage)
-            out[:vl - ins.amount] = v[ins.vs, ins.amount:vl]
-            v[ins.vd, :vl] = out
-        elif t is isa.LDSCALAR:
-            s[ins.sd] = mem[ins.addr]
-        else:
-            raise ValueError(ins)
-    return mem, s
-
-
-# ---------------------------------------------------------------------------
-# random program generator (index-safe by construction)
-# ---------------------------------------------------------------------------
-
-MEM_WORDS = 256
-IDX_REG = 30      # register pre-loaded with small integers, for VGATHER
-
-
-def random_program(r: np.random.RandomState, sew: int, n_ops: int = 14):
-    vl = int(r.randint(4, 33))
-    mem = r.uniform(-1, 1, MEM_WORDS)
-    mem[:40] = r.randint(0, 8, 40)      # integer-exact region for gathers
-    sregs = {0: float(np.float32(r.uniform(-2, 2)))}
-    prog = [isa.VSETVL(vl, sew), isa.VLD(IDX_REG, 0)]
-    for vr in range(1, 5):              # seed a few live registers
-        prog.append(isa.VLD(vr, int(r.randint(40, MEM_WORDS - vl))))
-    pool = ["vfma", "vfma_vs", "vfadd", "vfmul", "vadd", "vins", "vld",
-            "vlds", "vgather", "vst", "vslide", "vext", "ldscalar"]
-    if sew < 64:
-        pool += ["vfwmul", "vfwma", "vfncvt"]
-    regs = lambda: int(r.randint(1, 9))
-    for _ in range(n_ops):
-        op = pool[r.randint(len(pool))]
-        if op == "vfma":
-            prog.append(isa.VFMA(regs(), regs(), regs()))
-        elif op == "vfma_vs":
-            prog.append(isa.VFMA_VS(regs(), 0, regs()))
-        elif op == "vfadd":
-            prog.append(isa.VFADD(regs(), regs(), regs()))
-        elif op == "vfmul":
-            prog.append(isa.VFMUL(regs(), regs(), regs()))
-        elif op == "vadd":
-            prog.append(isa.VADD(regs(), regs(), regs()))
-        elif op == "vins":
-            prog.append(isa.VINS(regs(), 0))
-        elif op == "vld":
-            prog.append(isa.VLD(regs(), int(r.randint(40, MEM_WORDS - vl))))
-        elif op == "vlds":
-            stride = int(r.randint(1, 4))
-            hi = MEM_WORDS - stride * (vl - 1) - 1
-            prog.append(isa.VLDS(regs(), int(r.randint(40, hi)), stride))
-        elif op == "vgather":
-            # idx values come from the integer-exact region (0..7)
-            prog.append(isa.VGATHER(regs(), int(r.randint(0, MEM_WORDS - 8)),
-                                    IDX_REG))
-        elif op == "vst":
-            # keep the gather-index region pristine
-            prog.append(isa.VST(regs(), int(r.randint(40, MEM_WORDS - vl))))
-        elif op == "vslide":
-            prog.append(isa.VSLIDE(regs(), regs(), int(r.randint(0, vl))))
-        elif op == "vext":
-            prog.append(isa.VEXT(int(r.randint(1, 4)), regs(),
-                                 int(r.randint(0, vl))))
-        elif op == "ldscalar":
-            prog.append(isa.LDSCALAR(0, int(r.randint(0, MEM_WORDS))))
-        elif op == "vfwmul":
-            prog.append(isa.VFWMUL(regs(), regs(), regs()))
-        elif op == "vfwma":
-            prog.append(isa.VFWMA(regs(), regs(), regs()))
-        elif op == "vfncvt":
-            prog.append(isa.VFNCVT(regs(), regs()))
-    return prog, mem, sregs
-
-
-TOL = {64: 1e-5, 32: 1e-5, 16: 1e-2}   # storage is f32 in-process
 
 
 @settings(max_examples=15, deadline=None)
@@ -163,9 +33,9 @@ def test_random_program_reference_vs_numpy(sew, seed):
     r = np.random.RandomState(seed)
     prog, mem, sregs = random_program(r, sew)
     cfg = AraConfig(lanes=2)
-    eng = ReferenceEngine(cfg, vlmax=64, dtype=jnp.float32)
+    eng = ReferenceEngine(cfg, vlmax=VLMAX64, dtype=jnp.float32)
     got_mem, got_s = eng.run(prog, mem, sregs=dict(sregs))
-    want_mem, want_s = numpy_oracle(prog, mem, 64, sregs=dict(sregs),
+    want_mem, want_s = numpy_oracle(prog, mem, VLMAX64, sregs=dict(sregs),
                                     storage=np.float32)
     np.testing.assert_allclose(got_mem, want_mem, rtol=TOL[sew],
                                atol=TOL[sew])
@@ -181,13 +51,15 @@ def test_widening_ops_semantics(sew):
     n = 8
     r = np.random.RandomState(3)
     mem = np.concatenate([r.uniform(-2, 2, 2 * n), np.zeros(2 * n)])
+    # wide destination v4 is 2-aligned and clear of its sources (EMUL=2
+    # reserves v4..v5); VFNCVT's narrow result goes outside that span
     prog = [isa.VSETVL(n, sew),
             isa.VLD(1, 0), isa.VLD(2, n),
-            isa.VFWMUL(3, 1, 2),           # wide product
-            isa.VFWMA(3, 1, 2),            # wide accumulate: 2*x*y
-            isa.VST(3, 2 * n),
-            isa.VFNCVT(4, 3),              # narrow back to SEW
-            isa.VST(4, 3 * n)]
+            isa.VFWMUL(4, 1, 2),           # wide product
+            isa.VFWMA(4, 1, 2),            # wide accumulate: 2*x*y
+            isa.VST(4, 2 * n),
+            isa.VFNCVT(6, 4),              # narrow back to SEW
+            isa.VST(6, 3 * n)]
     out, _ = ReferenceEngine(cfg, vlmax=n, dtype=jnp.float32).run(prog, mem)
     narrow, wide = SEW_NP[sew], SEW_NP[2 * sew]
     x = mem[:n].astype(narrow).astype(np.float32)
@@ -202,7 +74,7 @@ def test_widening_ops_semantics(sew):
 
 def test_widening_illegal_at_sew64():
     cfg = AraConfig(lanes=2)
-    prog = [isa.VSETVL(8, 64), isa.VFWMUL(3, 1, 2)]
+    prog = [isa.VSETVL(8, 64), isa.VFWMUL(4, 1, 2)]
     with pytest.raises(ValueError):
         ReferenceEngine(cfg, vlmax=8).run(prog, np.zeros(16))
     with pytest.raises(ValueError):      # scoreboard agrees it's illegal
@@ -268,8 +140,8 @@ for sew in (64, 32, 16):
             isa.VFMA(2, 1, 3),
             isa.VFMUL(4, 2, 3)]
     if sew < 64:
-        prog += [isa.VFWMUL(5, 1, 2), isa.VFWMA(5, 2, 3),
-                 isa.VFNCVT(6, 5), isa.VST(6, 200)]
+        prog += [isa.VFWMUL(8, 1, 2), isa.VFWMA(8, 2, 3),
+                 isa.VFNCVT(6, 8), isa.VST(6, 200)]
     prog += [isa.VST(2, 120), isa.VST(3, 160),
              isa.VSLIDE(7, 2, 3), isa.VST(7, 44)]
     o1, s1 = ref.run(prog, mem)

@@ -1,0 +1,84 @@
+"""Golden-file regression for the closed-form perf model.
+
+tests/golden/perfmodel_fig5.json pins matmul_cycles for the paper's Fig. 5
+matmul sizes (n ∈ {16..256}, lanes ∈ {2..16}) at every SEW × LMUL, plus
+daxpy_cycles at the §V-B size — so any drift in the analytical model fails
+tier-1 loudly instead of sliding silently inside the published-number
+tolerances of tests/test_perfmodel.py (which compare against the paper at
+5-16%, plenty of room to hide a regression).
+
+To regenerate after an *intentional* model change:
+
+    REGEN_GOLDEN=1 PYTHONPATH=src python -m pytest tests/test_perfmodel_golden.py
+
+then review the JSON diff like any other code change.
+"""
+import json
+import os
+
+import pytest
+
+from repro.configs.ara import AraConfig
+from repro.core import isa
+from repro.core import perfmodel as pm
+
+GOLDEN = os.path.join(os.path.dirname(os.path.abspath(__file__)), "golden",
+                      "perfmodel_fig5.json")
+
+LANES = (2, 4, 8, 16)
+SIZES = (16, 32, 64, 128, 256)       # Fig. 5 problem sizes
+DAXPY_N = 256                        # §V-B size
+
+
+def compute_table():
+    table = {}
+    for lanes in LANES:
+        cfg = AraConfig(lanes=lanes)
+        for sew in isa.SEWS:
+            for lmul in isa.LMULS:
+                for n in SIZES:
+                    key = f"matmul/l{lanes}/n{n}/sew{sew}/m{lmul}"
+                    table[key] = pm.matmul_cycles(cfg, n, ew_bits=sew,
+                                                  lmul=lmul)
+                key = f"daxpy/l{lanes}/n{DAXPY_N}/sew{sew}/m{lmul}"
+                table[key] = pm.daxpy_cycles(cfg, DAXPY_N, ew_bits=sew,
+                                             lmul=lmul)
+    return table
+
+
+def test_perfmodel_matches_golden_table():
+    table = compute_table()
+    if os.environ.get("REGEN_GOLDEN"):
+        os.makedirs(os.path.dirname(GOLDEN), exist_ok=True)
+        with open(GOLDEN, "w") as f:
+            json.dump(table, f, indent=1, sort_keys=True)
+        pytest.skip(f"regenerated {GOLDEN} ({len(table)} entries)")
+    assert os.path.exists(GOLDEN), \
+        f"golden file missing; REGEN_GOLDEN=1 to create {GOLDEN}"
+    with open(GOLDEN) as f:
+        want = json.load(f)
+    assert set(table) == set(want), \
+        "perfmodel grid changed; regenerate the golden table deliberately"
+    drift = {k: (table[k], want[k]) for k in want
+             if table[k] != pytest.approx(want[k], rel=1e-12)}
+    assert not drift, f"perfmodel drift vs golden table: {drift}"
+
+
+def test_golden_table_encodes_lmul_amortization():
+    """The checked-in numbers themselves witness the ISSUE-2 claims:
+    wherever a single register cannot hold the 256-wide row (lanes=2 at
+    SEW=64: VLMAX=128), the 256×256 matmul takes strictly fewer cycles
+    grouped at LMUL=4 than at LMUL=1; at wider VLMAX moderate grouping
+    is a no-op; and LMUL=8's register pressure (row tile clamped to
+    t=2, halving B-row reuse) is an honest cost, never hidden."""
+    with open(GOLDEN) as f:
+        want = json.load(f)
+    for sew in isa.SEWS:
+        for lanes in LANES:
+            c = {m: want[f"matmul/l{lanes}/n256/sew{sew}/m{m}"]
+                 for m in isa.LMULS}
+            if AraConfig(lanes=lanes).vlmax(sew) < 256:
+                assert c[4] < c[1], (sew, lanes, c)
+            else:
+                assert c[4] == c[1], (sew, lanes, c)
+                assert c[8] > c[1], (sew, lanes, c)   # over-grouping costs
