@@ -1,0 +1,143 @@
+"""Engine runtime throughput: compile-once/run-many vs per-program tracing.
+
+Measures the PR-4 staged-runtime claim directly: executing N random
+differential programs of one shape *signature* through
+
+1. ``uncached`` — the old world: the trace cache is cleared before every
+   program, so each one re-traces and re-XLA-compiles (what per-program
+   ``shard_map`` unrolling used to cost, ~15-20 s/program on CPU);
+2. ``cached`` — one warm compile, then per-program ``run()`` calls that
+   hit the signature cache;
+3. ``cached_batched`` — ``run_many``: the whole batch in ONE device call
+   (vmap over programs, donated buffers).
+
+Reports programs/sec and the shared cache's compile counter for each
+path, plus the cached_batched/uncached speedup — the acceptance bar is
+>= 10×. Results land in ``BENCH_engines.json`` (CI uploads it as an
+artifact) and print as ``engine_throughput,key=value,...`` lines.
+
+  PYTHONPATH=src python benchmarks/engine_throughput.py \
+      [--n 24] [--sew 32] [--lmul 2] [--uncached-n 3] \
+      [--out BENCH_engines.json] [--min-speedup 10]
+
+The engine is the single-device ReferenceEngine (the LaneEngine shares
+the same staged step and cache; its signatures just carry lanes/mesh).
+"""
+import argparse
+import json
+import platform
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.ara import AraConfig
+from repro.core import staging
+from repro.testing import differential as diff
+from repro.core.vector_engine import ReferenceEngine
+
+
+def make_batch(n, sew, lmul, n_ops=14, seed0=0):
+    progs, mems, srs = [], [], []
+    for i in range(n):
+        p, m, s = diff.random_program(np.random.RandomState(seed0 + i),
+                                      sew, lmul, n_ops=n_ops)
+        progs.append(p)
+        mems.append(m)
+        srs.append(s)
+    return progs, mems, srs
+
+
+def _rate(n_programs, seconds, compiles):
+    return {"programs": n_programs, "seconds": round(seconds, 4),
+            "programs_per_sec": round(n_programs / seconds, 2),
+            "compiles": compiles}
+
+
+def bench(n=24, sew=32, lmul=2, uncached_n=3, reps=3):
+    eng = ReferenceEngine(AraConfig(lanes=2), vlmax=diff.VLMAX64,
+                          dtype=jnp.float32, cache=staging.TraceCache())
+    progs, mems, srs = make_batch(n, sew, lmul)
+    win = diff.grid_window(diff.VLMAX64)
+    stats = eng.cache.stats
+
+    # 1. per-program tracing: clear the cache before every run
+    stats.reset()
+    t0 = time.perf_counter()
+    for i in range(uncached_n):
+        eng.cache.clear()
+        eng.run(progs[i], mems[i], dict(srs[i]))
+    uncached = _rate(uncached_n, time.perf_counter() - t0, stats.compiles)
+
+    # 2. cached per-program: one compile, then N cache hits
+    eng.cache.clear()
+    stats.reset()
+    eng.run(progs[0], mems[0], dict(srs[0]))          # warm the signature
+    t0 = time.perf_counter()
+    for i in range(n):
+        eng.run(progs[i], mems[i], dict(srs[i]))
+    cached = _rate(n, time.perf_counter() - t0, stats.compiles)
+
+    # 3. cached + batched: the whole batch in one device call
+    eng.cache.clear()
+    stats.reset()
+    t0 = time.perf_counter()
+    eng.run_many(progs, mems, [dict(s) for s in srs], window=win)
+    compile_s = time.perf_counter() - t0              # includes the trace
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        eng.run_many(progs, mems, [dict(s) for s in srs], window=win)
+    batched = _rate(n * reps, time.perf_counter() - t0, stats.compiles)
+    batched["compile_seconds_first_call"] = round(compile_s, 4)
+
+    return {
+        "bench": "engine_throughput",
+        "engine": "reference(staged)",
+        "config": {"n_programs": n, "sew": sew, "lmul": lmul,
+                   "vlmax64": diff.VLMAX64, "n_ops": 14,
+                   "uncached_n": uncached_n, "reps": reps,
+                   "backend": jax.default_backend(),
+                   "platform": platform.platform()},
+        "uncached": uncached,
+        "cached": cached,
+        "cached_batched": batched,
+        "speedup_cached_batched_vs_uncached": round(
+            batched["programs_per_sec"] / uncached["programs_per_sec"], 1),
+        "speedup_cached_vs_uncached": round(
+            cached["programs_per_sec"] / uncached["programs_per_sec"], 1),
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=24)
+    ap.add_argument("--sew", type=int, default=32)
+    ap.add_argument("--lmul", type=int, default=2)
+    ap.add_argument("--uncached-n", type=int, default=3)
+    ap.add_argument("--out", default="BENCH_engines.json")
+    ap.add_argument("--min-speedup", type=float, default=None,
+                    help="exit nonzero if cached_batched/uncached is below")
+    args = ap.parse_args()
+
+    res = bench(n=args.n, sew=args.sew, lmul=args.lmul,
+                uncached_n=args.uncached_n)
+    for path in ("uncached", "cached", "cached_batched"):
+        row = {"path": path, **res[path]}
+        print("engine_throughput," +
+              ",".join(f"{k}={v}" for k, v in row.items()), flush=True)
+    print(f"engine_throughput,path=speedup,"
+          f"cached_batched_vs_uncached="
+          f"{res['speedup_cached_batched_vs_uncached']}")
+    with open(args.out, "w") as f:
+        json.dump(res, f, indent=2)
+    print(f"wrote {args.out}")
+    if args.min_speedup is not None and \
+            res["speedup_cached_batched_vs_uncached"] < args.min_speedup:
+        raise SystemExit(
+            f"speedup {res['speedup_cached_batched_vs_uncached']} "
+            f"< required {args.min_speedup}")
+
+
+if __name__ == "__main__":
+    main()

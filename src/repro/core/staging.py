@@ -1,0 +1,468 @@
+"""Staged engine runtime: compile-once, run-many execution of ISA programs.
+
+The software engines used to re-trace (and re-XLA-compile) every program
+they ran — ~15-20 s per random program for the shard_map LaneEngine — so
+cross-engine differential coverage was priced per *program*. This module
+makes execution cost per *signature* instead, the software analogue of
+Ara's one-issue-many-elements amortization (§III-E2, §IV):
+
+- :func:`resolve_vtype` — the host-side pre-pass. Walks a program once,
+  legality-checks every instruction via ``isa.check_insn`` (hoisted out of
+  the traced execution loop — both engines and the scoreboard share it),
+  and resolves the per-instruction vtype (vl, sew, lmul) that ``VSETVL``
+  establishes, since VSETVL operands are static program text.
+- :func:`encode_program` — lowers a program into a structure-of-arrays
+  instruction table: one int32 row per instruction (opcode id, register
+  bases, scalar reg, address/stride/amount/nf immediates, resolved
+  vl/vpr/lmul/sew). ``VSETVL`` disappears here — its effect is baked into
+  every row.
+- :class:`Signature` — the static shape key of an encoded batch: engine
+  kind, lanes, register-file slots, padded memory words, padded program
+  length, batch size, storage dtype. Two programs with the same signature
+  run through the same compiled executable; opcodes, operands and vtype
+  are *data*.
+- :class:`TraceCache` — an LRU of compiled executables keyed by
+  Signature, shared by ``ReferenceEngine`` and ``LaneEngine`` (module
+  default :data:`TRACE_CACHE`), with hit/miss/compile counters tests and
+  benchmarks can assert on.
+- :func:`build_runner` — builds the one jitted executable per signature:
+  a ``lax.scan`` over instruction rows whose step is a ``lax.switch``
+  over opcodes, ``vmap``-batched over programs, wrapped in ``shard_map``
+  for the lane engine, with memory/scalar buffers donated.
+
+Program and memory lengths are padded to buckets (``NOP`` rows, zero
+words) so near-miss shapes share executables; the true memory size is
+per-program *data*, which keeps the index-clamp and store-bounds
+semantics exact on padded buffers.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import isa
+from repro.core.compat import shard_map as _shard_map
+from repro.core.precision import SEW_TO_DTYPE
+
+NF_MAX = max(isa.LMULS)          # nf * lmul <= 8 caps fields at 8
+
+# Opcode table: VGATHER and VLUXEI share semantics (and a branch); VSETVL
+# has no row (the pre-pass folds it into every row's vl/vpr/lmul/sew).
+OPS = ("nop", "vld", "vlds", "vgather", "vlseg", "vst", "vsseg", "vsuxei",
+       "vfma", "vfma_vs", "vfadd", "vfmul", "vfwmul", "vfwma", "vfncvt",
+       "vadd", "vins", "vext", "vslide", "ldscalar")
+OP_ID = {name: i for i, name in enumerate(OPS)}
+
+# Instruction-table columns (all int32):
+#   op    opcode id                  rd   dest/store-source group base
+#   ra    source group base (va / vs / vidx)
+#   rb    second source group base (vb)
+#   sd    scalar register id         imm  element address
+#   aux   stride / slide amount / extract index / nf
+#   vl    resolved vector length     vpr  per-register capacity at sew
+#   lmul  group multiplier           sewi/wsewi  SEWS index of sew / 2*sew
+FIELDS = ("op", "rd", "ra", "rb", "sd", "imm", "aux",
+          "vl", "vpr", "lmul", "sewi", "wsewi")
+
+_NOP_DEFAULTS = {"vpr": 1, "lmul": 1}     # keep // and % well-defined
+
+_SEW_DTYPE = {bits: jnp.dtype(name) for bits, name in SEW_TO_DTYPE.items()}
+
+_OP_FOR = {
+    isa.VLD: "vld", isa.VLDS: "vlds", isa.VGATHER: "vgather",
+    isa.VLUXEI: "vgather", isa.VLSEG: "vlseg", isa.VST: "vst",
+    isa.VSSEG: "vsseg", isa.VSUXEI: "vsuxei", isa.VFMA: "vfma",
+    isa.VFMA_VS: "vfma_vs", isa.VFADD: "vfadd", isa.VFMUL: "vfmul",
+    isa.VFWMUL: "vfwmul", isa.VFWMA: "vfwma", isa.VFNCVT: "vfncvt",
+    isa.VADD: "vadd", isa.VINS: "vins", isa.VEXT: "vext",
+    isa.VSLIDE: "vslide", isa.LDSCALAR: "ldscalar",
+}
+
+
+def bucket(n: int, step: int = 8) -> int:
+    """Round ``n`` up to a multiple of ``step`` (minimum one bucket)."""
+    return max(step, -(-n // step) * step)
+
+
+def bucket_pow2(n: int, lo: int = 64) -> int:
+    """Round ``n`` up to a power of two (memory padding granularity)."""
+    w = lo
+    while w < n:
+        w *= 2
+    return w
+
+
+# ---------------------------------------------------------------------------
+# host pre-pass: legality + vtype resolution (shared with the scoreboard)
+# ---------------------------------------------------------------------------
+
+
+def resolve_vtype(program, vlmax64: int):
+    """Legality-check a program once and resolve its per-insn vtype.
+
+    Returns ``[(ins, vl, sew, lmul), ...]`` with VSETVL rows carrying the
+    vtype they establish. Raises ``ValueError`` on the first illegal
+    instruction — on the host, before anything is traced or executed;
+    both engines and ``simulate_timing`` run this exact pre-pass.
+    """
+    out = []
+    vl, sew, lmul = vlmax64, 64, 1
+    for ins in program:
+        isa.check_insn(ins, sew, lmul)
+        if type(ins) is isa.VSETVL:
+            sew, lmul = ins.sew, ins.lmul
+            vl = min(ins.vl, vlmax64 * (64 // sew) * lmul)
+        out.append((ins, vl, sew, lmul))
+    return out
+
+
+def encode_program(program, vlmax64: int):
+    """Lower a program to instruction-table rows (list of field dicts)."""
+    rows = []
+    for ins, vl, sew, lmul in resolve_vtype(program, vlmax64):
+        t = type(ins)
+        if t is isa.VSETVL:
+            continue
+        name = _OP_FOR.get(t)
+        if name is None:
+            raise ValueError(ins)
+        r = dict.fromkeys(FIELDS, 0)
+        r.update(op=OP_ID[name], vl=vl, vpr=vlmax64 * (64 // sew),
+                 lmul=lmul, sewi=isa.SEWS.index(sew),
+                 wsewi=isa.SEWS.index(2 * sew) if 2 * sew in isa.SEWS else 0)
+        if t in (isa.VLD, isa.VLDS, isa.VGATHER, isa.VLUXEI, isa.VLSEG):
+            r["rd"], r["imm"] = ins.vd, ins.addr
+            if t is isa.VLDS:
+                r["aux"] = ins.stride
+            elif t is isa.VLSEG:
+                r["aux"] = ins.nf
+            elif t is not isa.VLD:
+                r["ra"] = ins.vidx
+        elif t in (isa.VST, isa.VSSEG, isa.VSUXEI):
+            r["rd"], r["imm"] = ins.vs, ins.addr
+            if t is isa.VSSEG:
+                r["aux"] = ins.nf
+            elif t is isa.VSUXEI:
+                r["ra"] = ins.vidx
+        elif t in (isa.VFMA, isa.VFADD, isa.VFMUL, isa.VADD,
+                   isa.VFWMUL, isa.VFWMA):
+            r["rd"], r["ra"], r["rb"] = ins.vd, ins.va, ins.vb
+        elif t is isa.VFMA_VS:
+            r["rd"], r["sd"], r["rb"] = ins.vd, ins.vs_scalar, ins.vb
+        elif t is isa.VFNCVT:
+            r["rd"], r["ra"] = ins.vd, ins.vs
+        elif t is isa.VINS:
+            r["rd"], r["sd"] = ins.vd, ins.scalar
+        elif t is isa.VEXT:
+            r["sd"], r["ra"], r["aux"] = ins.sd, ins.vs, ins.idx
+        elif t is isa.VSLIDE:
+            r["rd"], r["ra"], r["aux"] = ins.vd, ins.vs, ins.amount
+        elif t is isa.LDSCALAR:
+            r["sd"], r["imm"] = ins.sd, ins.addr
+        rows.append(r)
+    return rows
+
+
+def pack_tables(tables, pad_to=None):
+    """Stack per-program row lists into an (N, P) SoA batch, NOP-padded.
+
+    ``P`` is bucketed so programs of nearby length share a signature.
+    """
+    p = pad_to or bucket(max([len(t) for t in tables] + [1]))
+    out = {}
+    for f in FIELDS:
+        a = np.full((len(tables), p), _NOP_DEFAULTS.get(f, 0), np.int32)
+        for i, rows in enumerate(tables):
+            if rows:
+                a[i, :len(rows)] = [r[f] for r in rows]
+        out[f] = a
+    return out
+
+
+# ---------------------------------------------------------------------------
+# trace cache
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Signature:
+    """Static shape key of an encoded batch — everything XLA specializes
+    on. Programs differing only in opcodes/operands/vtype share one."""
+    kind: str            # "ref" | "lane"
+    lanes: int
+    slots: int           # per-lane element slots per vector register
+    window: int          # global flat element window (>= the batch max vl)
+    mem_words: int       # padded memory words
+    prog_len: int        # padded instruction rows
+    batch: int
+    storage: str         # canonical dtype name
+    mesh_key: tuple = ()  # (axis, device ids) for the lane engine
+
+
+@dataclasses.dataclass
+class CacheStats:
+    hits: int = 0
+    misses: int = 0
+    compiles: int = 0    # actual traces (counts silent retraces too)
+
+    def snapshot(self) -> "CacheStats":
+        return dataclasses.replace(self)
+
+    def reset(self):
+        self.hits = self.misses = self.compiles = 0
+
+
+class TraceCache:
+    """LRU cache of compiled signature executables.
+
+    One instance (module default :data:`TRACE_CACHE`) is shared by both
+    engines, so a ReferenceEngine and a LaneEngine sized alike still get
+    distinct entries (``kind`` is in the key) while repeated runs of
+    either reuse theirs. ``stats.compiles`` is bumped at *trace* time
+    inside the built executable, so tests can assert that same-signature
+    programs really do reuse the compiled step function.
+    """
+
+    def __init__(self, maxsize: int = 64):
+        self.maxsize = maxsize
+        self.stats = CacheStats()
+        self._fns = collections.OrderedDict()
+
+    def __len__(self):
+        return len(self._fns)
+
+    def get(self, sig: Signature, builder):
+        fn = self._fns.get(sig)
+        if fn is not None:
+            self.stats.hits += 1
+            self._fns.move_to_end(sig)
+            return fn
+        self.stats.misses += 1
+        fn = builder()
+        self._fns[sig] = fn
+        while len(self._fns) > self.maxsize:
+            self._fns.popitem(last=False)
+        return fn
+
+    def clear(self):
+        self._fns.clear()
+
+
+TRACE_CACHE = TraceCache()
+
+
+# ---------------------------------------------------------------------------
+# the staged interpreter: scan over rows, switch over opcodes
+# ---------------------------------------------------------------------------
+
+
+def build_runner(sig: Signature, stats: CacheStats, mesh=None,
+                 axis: str = None):
+    """Compile the one executable for ``sig``.
+
+    Returns ``fn(mems, svecs, sizes, rows) -> (mems, svecs)`` where
+    ``mems`` is (batch, mem_words), ``svecs`` (batch, 32), ``sizes``
+    (batch,) true memory words, and ``rows`` the packed (batch, prog_len)
+    instruction table. Lane-sharded when ``mesh``/``axis`` are given
+    (memory replicated, reconciled through psum — the VLSU as the single
+    all-lane unit), single-device otherwise: both engines share this one
+    step definition, so their semantics cannot drift.
+
+    Element layout per lane: local flat-group slot ``p`` of a register
+    group holds global element ``lane + p * lanes`` (the interleaved VRF
+    partition of §III-E2; with lanes=1 this degenerates to the identity,
+    which *is* the reference engine).
+    """
+    lanes = sig.lanes
+    slots = sig.slots                      # per-register slots per lane
+    gwin = sig.window                      # global element window
+    window = gwin // lanes                 # flat group window per lane
+    storage = jnp.dtype(sig.storage)
+    nregs = isa.NUM_VREGS
+
+    def _q(x, bits):
+        # HW-width rounding; identity when the format is >= storage width
+        dt = _SEW_DTYPE[bits]
+        if dt.itemsize >= storage.itemsize:
+            return x
+        return x.astype(dt).astype(storage)
+
+    def qdyn(x, sewi):
+        return jax.lax.switch(
+            sewi, [lambda y, b=b: _q(y, b) for b in isa.SEWS], x)
+
+    def one_program(mem, s, size, rows):
+        stats.compiles += 1                # trace-time side effect
+        lane = jax.lax.axis_index(axis) if axis else 0
+        e = jnp.arange(window)
+        ids = lane + e * lanes             # global element id per slot
+
+        def allsum(x):
+            return jax.lax.psum(x, axis) if axis else x
+
+        def allmax(x):
+            return jax.lax.pmax(x, axis) if axis else x
+
+        def step(carry, row):
+            v, mem, s = carry
+            vl = row["vl"]
+            spr = jnp.maximum(row["vpr"] // lanes, 1)  # slots/reg/lane
+            mask = ids < vl
+
+            def R(v, base):
+                r = jnp.clip(base + e // spr, 0, nregs - 1)
+                return v[r, e % spr]
+
+            def W(v, base, vals, ok=None):
+                ok = mask if ok is None else ok
+                r = jnp.where(ok, base + e // spr, nregs)
+                return v.at[r, e % spr].set(vals, mode="drop")
+
+            def mstore(mem, gidx, vals, ok):
+                # VLSU collect: scatter the valid contributions, count
+                # writers per address, reconcile across lanes via psum
+                gi = jnp.where(ok, gidx, 0)
+                add = jnp.where(ok, vals, 0).astype(storage)
+                upd = allsum(jnp.zeros_like(mem).at[gi].add(add))
+                cnt = allsum(jnp.zeros(mem.shape, jnp.int32).at[gi].add(
+                    ok.astype(jnp.int32)))
+                return jnp.where(cnt > 0, upd, mem)
+
+            def op_nop(v, mem, s):
+                return v, mem, s
+
+            def op_vld(v, mem, s):
+                idx = jnp.where(mask, row["imm"] + ids, 0)
+                return W(v, row["rd"], qdyn(mem[idx], row["sewi"])), mem, s
+
+            def op_vlds(v, mem, s):
+                idx = jnp.where(mask, row["imm"] + row["aux"] * ids, 0)
+                return W(v, row["rd"], qdyn(mem[idx], row["sewi"])), mem, s
+
+            def op_vgather(v, mem, s):
+                # OOB indexed loads are UB in HW; the model pins them to
+                # the *true* memory edges (size is data, not padding)
+                iv = R(v, row["ra"]).astype(jnp.int32)
+                gi = jnp.clip(jnp.where(mask, row["imm"] + iv, 0),
+                              0, size - 1)
+                return W(v, row["rd"], qdyn(mem[gi], row["sewi"])), mem, s
+
+            def op_vlseg(v, mem, s):
+                nf = row["aux"]
+                for f in range(NF_MAX):
+                    ok = mask & (f < nf)
+                    idx = jnp.where(ok, row["imm"] + nf * ids + f, 0)
+                    v = W(v, row["rd"] + f * row["lmul"],
+                          qdyn(mem[idx], row["sewi"]), ok)
+                return v, mem, s
+
+            def op_vst(v, mem, s):
+                gi = row["imm"] + ids
+                return v, mstore(mem, gi, R(v, row["rd"]),
+                                 mask & (gi < size)), s
+
+            def op_vsseg(v, mem, s):
+                nf = row["aux"]
+                for f in range(NF_MAX):
+                    gi = row["imm"] + f + nf * ids
+                    ok = mask & (f < nf) & (gi < size)
+                    mem = mstore(mem, gi,
+                                 R(v, row["rd"] + f * row["lmul"]), ok)
+                return v, mem, s
+
+            def op_vsuxei(v, mem, s):
+                # highest element wins: find each address's winning
+                # element id globally (pmax), then contribute only it
+                iv = R(v, row["ra"]).astype(jnp.int32)
+                gi = jnp.clip(jnp.where(mask, row["imm"] + iv, 0),
+                              0, size - 1)
+                eid = jnp.where(mask, ids, -1).astype(jnp.int32)
+                order = allmax(
+                    jnp.full(mem.shape, -1, jnp.int32).at[gi].max(eid))
+                win = mask & (order[gi] == ids)
+                contrib = allsum(
+                    jnp.zeros_like(mem).at[jnp.where(win, gi, 0)].add(
+                        jnp.where(win, R(v, row["rd"]), 0).astype(storage)))
+                return v, jnp.where(order >= 0, contrib, mem), s
+
+            def op_vfma(v, mem, s):
+                res = R(v, row["ra"]) * R(v, row["rb"]) + R(v, row["rd"])
+                return W(v, row["rd"], qdyn(res, row["sewi"])), mem, s
+
+            def op_vfma_vs(v, mem, s):
+                res = s[row["sd"]] * R(v, row["rb"]) + R(v, row["rd"])
+                return W(v, row["rd"], qdyn(res, row["sewi"])), mem, s
+
+            def op_vfadd(v, mem, s):
+                res = R(v, row["ra"]) + R(v, row["rb"])
+                return W(v, row["rd"], qdyn(res, row["sewi"])), mem, s
+
+            def op_vfmul(v, mem, s):
+                res = R(v, row["ra"]) * R(v, row["rb"])
+                return W(v, row["rd"], qdyn(res, row["sewi"])), mem, s
+
+            def op_vfwmul(v, mem, s):
+                res = R(v, row["ra"]) * R(v, row["rb"])
+                return W(v, row["rd"], qdyn(res, row["wsewi"])), mem, s
+
+            def op_vfwma(v, mem, s):
+                res = R(v, row["ra"]) * R(v, row["rb"]) + R(v, row["rd"])
+                return W(v, row["rd"], qdyn(res, row["wsewi"])), mem, s
+
+            def op_vfncvt(v, mem, s):
+                return (W(v, row["rd"], qdyn(R(v, row["ra"]),
+                                             row["sewi"])), mem, s)
+
+            def op_vins(v, mem, s):
+                vals = jnp.broadcast_to(s[row["sd"]], (window,))
+                return W(v, row["rd"], qdyn(vals, row["sewi"])), mem, s
+
+            def op_vext(v, mem, s):
+                hit = mask & (ids == row["aux"])
+                val = allsum(jnp.sum(jnp.where(hit, R(v, row["ra"]), 0)))
+                return v, mem, s.at[row["sd"]].set(val)
+
+            def op_vslide(v, mem, s):
+                # SLDU: materialize the group globally (psum over lanes'
+                # disjoint contributions — exact), then gather i+amount
+                src = jnp.where(mask, R(v, row["ra"]), 0)
+                vec = allsum(jnp.zeros((gwin,), storage).at[
+                    jnp.where(mask, ids, gwin)].set(src, mode="drop"))
+                tgt = jnp.clip(ids + row["aux"], 0, gwin - 1)
+                vals = jnp.where(ids + row["aux"] < vl, vec[tgt], 0)
+                return W(v, row["rd"], vals), mem, s
+
+            def op_ldscalar(v, mem, s):
+                return v, mem, s.at[row["sd"]].set(mem[row["imm"]])
+
+            branches = [op_nop, op_vld, op_vlds, op_vgather, op_vlseg,
+                        op_vst, op_vsseg, op_vsuxei, op_vfma, op_vfma_vs,
+                        op_vfadd, op_vfmul, op_vfwmul, op_vfwma,
+                        op_vfncvt, op_vfadd, op_vins, op_vext, op_vslide,
+                        op_ldscalar]
+            return jax.lax.switch(row["op"], branches, v, mem, s), None
+
+        v0 = jnp.zeros((nregs, slots), storage)
+        (_, mem, s), _ = jax.lax.scan(step, (v0, mem, s), rows)
+        return mem, s
+
+    if sig.batch == 1:
+        # unbatched fast path: lax.switch executes ONE branch per step at
+        # runtime (vmap would select over all of them even for batch 1)
+        def batched(mems, svecs, sizes, rows):
+            mem, s = one_program(mems[0], svecs[0], sizes[0],
+                                 {k: a[0] for k, a in rows.items()})
+            return mem[None], s[None]
+    else:
+        batched = jax.vmap(one_program)
+    if mesh is None:
+        return jax.jit(batched, donate_argnums=(0, 1))
+    from jax.sharding import PartitionSpec as PS
+    sharded = _shard_map(batched, mesh=mesh,
+                         in_specs=(PS(), PS(), PS(), PS()),
+                         out_specs=(PS(), PS()), check_vma=False)
+    return jax.jit(sharded, donate_argnums=(0, 1))

@@ -2,12 +2,28 @@
 
 Two execution backends with identical semantics (tested against each other):
 
-- ``ReferenceEngine`` — single-device jnp oracle.
+- ``ReferenceEngine`` — single-device oracle.
 - ``LaneEngine`` — shard_map over a ``lanes`` mesh axis. Element ``i`` of a
   vector register lives on lane ``i % lanes`` (the paper's element-partitioned
-  VRF, §III-E2). Arithmetic is lane-local; VSLIDE/VEXT go through ppermute/
-  psum (the SLDU); VST/VEXT reconcile replicated memory via psum (the VLSU —
-  the only all-lane units, exactly the paper's scalability argument).
+  VRF, §III-E2). Arithmetic is lane-local; VSLIDE/VEXT reconcile through
+  psum (the SLDU); VST and the indexed/segment stores reconcile replicated
+  memory via psum (the VLSU — the only all-lane units, exactly the paper's
+  scalability argument).
+
+Both are *staged interpreters* over ``core.staging``: a program is encoded
+once on the host into a structure-of-arrays instruction table (legality
+checked in the same pre-pass — ``isa.check_insn`` never runs under
+tracing), then executed by a single jitted ``lax.scan``-over-instructions
+/ ``lax.switch``-over-opcodes step function. XLA compiles one executable
+per shape *signature* (lanes, register slots, memory words, program
+length, batch, dtype) — cached in the LRU ``staging.TRACE_CACHE`` shared
+by both engines — so running N programs of the same shape costs one
+compile plus N cheap device calls, and ``run_many`` executes a whole
+batch sharing a signature in ONE device call (``vmap`` over programs,
+memory/register buffers donated). This is the software analogue of the
+paper's one-issue-many-elements amortization, and what makes the full
+SEW × LMUL differential grid cheap enough for tier-1 (see
+docs/engine.md).
 
 Multi-precision (§III-E4): both engines honor VSETVL's SEW. Registers are
 fixed-size byte slices, so VLMAX scales by 64/SEW; every arithmetic result
@@ -18,14 +34,12 @@ Widening ops (VFWMUL/VFWMA) round once into the 2·SEW format, modeling
 
 Register grouping (RVV 1.0 LMUL): a vector operand names LMUL consecutive
 registers holding up to ``lmul * vlmax(sew)`` elements — element ``m`` of a
-group lives in register ``base + m // vlmax(sew)``. Both engines execute
-grouped operands through flat read/write helpers so every op (arithmetic,
-slides, the whole VLSU repertoire) is written once against the flattened
-element view; ``isa.check_insn`` is consulted per instruction, so illegal
-alignment/overlap raises identically here, in the scoreboard, and in the
-test oracle. In the LaneEngine the interleaved lane layout is preserved
-across the group (element ``m`` on lane ``m % lanes`` regardless of LMUL),
-which keeps slides/permutes a single uniform code path.
+group lives in register ``base + m // vlmax(sew)``. The staged step
+executes grouped operands through one flat windowed read/write helper, so
+every op (arithmetic, slides, the whole VLSU repertoire) is written once
+against the flattened element view; in the LaneEngine the interleaved lane
+layout is preserved across the group (element ``m`` on lane ``m % lanes``
+regardless of LMUL).
 
 VLSU model: unit-stride (VLD/VST), constant-stride (VLDS), segment
 (VLSEG/VSSEG: ``nf``-field AoS de/interleave), and indexed
@@ -36,102 +50,55 @@ contract stays exact even for colliding or clamped index vectors.
 
 ``simulate_timing`` is an event-driven scoreboard (issue interval, per-unit
 occupancy, chaining lag) giving an instruction-accurate cycle estimate that
-cross-validates the closed-form core/perfmodel.py. FPU/SLDU occupancy
-scales as e / (64/SEW) — the datapath subdivides 64/SEW ways, reproducing
-the paper's 2×/4× throughput claim — and VLSU bursts move SEW/8-byte
-elements, so memory occupancy shrinks proportionally too. LMUL enters as
-vector length: one grouped instruction occupies its unit for up to LMUL×
-longer against a single issue slot, which is exactly the paper's §IV
-issue-interval amortization (and the reason Ara2 adopted grouping).
+cross-validates the closed-form core/perfmodel.py. It shares the engines'
+host pre-pass (``staging.resolve_vtype``), so a program is legality-checked
+exactly once per consumer. FPU/SLDU occupancy scales as e / (64/SEW) — the
+datapath subdivides 64/SEW ways, reproducing the paper's 2×/4× throughput
+claim — and VLSU bursts move SEW/8-byte elements, so memory occupancy
+shrinks proportionally too. LMUL enters as vector length: one grouped
+instruction occupies its unit for up to LMUL× longer against a single
+issue slot, which is exactly the paper's §IV issue-interval amortization
+(and the reason Ara2 adopted grouping).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.ara import AraConfig
-from repro.core import isa
-from repro.core.compat import shard_map
+from repro.core import isa, staging
 from repro.core.perfmodel import C_MEM_LANE, L_MEM
-from repro.core.precision import SEW_TO_DTYPE
 
 CHAIN_LAG = 4.0   # cycles: consumer starts this far behind producer (chaining)
 
 MIN_SEW = min(isa.SEWS)
-
-# float format per element width; widening ops use _WIDE_DTYPE[sew]
-_SEW_DTYPE = {bits: jnp.dtype(name) for bits, name in SEW_TO_DTYPE.items()}
+N_SREGS = 32      # fixed scalar register file
 
 
-def _wide_bits(sew: int) -> int:
-    if 2 * sew not in _SEW_DTYPE:
-        raise ValueError(
-            f"widening op illegal at SEW={sew} (2*SEW exceeds ELEN=64)")
-    return 2 * sew
+class _StagedEngine:
+    """Shared compile-once runtime: encode → cached executable → batch.
 
-
-def _quantize(x, bits: int, storage):
-    """Round ``x`` through the bits-wide float format, back to storage.
-
-    Rounding to a format at least as wide as the value's is the identity —
-    skipped, which also avoids spurious x64-disabled truncation warnings
-    when storage is effectively float32.
+    Subclasses pin ``kind``/``lanes``/``mesh``/``axis``; everything else —
+    encoding, padding, the signature, the cache lookup, the single device
+    call, the one host conversion at the boundary — lives here.
     """
-    dt = _SEW_DTYPE[bits]
-    if dt.itemsize >= jnp.dtype(x.dtype).itemsize:
-        return x
-    return x.astype(dt).astype(storage)
 
+    kind = "ref"
+    lanes = 1
+    mesh = None
+    axis = None
+    mesh_key = ()
 
-def _group_read(v, reg: int, vl: int, vpr: int, lmul: int):
-    """Flat (vl,) view of a register group (contiguous element layout)."""
-    if vl <= vpr:
-        return v[reg, :vl]
-    return jnp.concatenate([v[reg + g, :vpr] for g in range(lmul)])[:vl]
-
-
-def _group_write(v, reg: int, vals, vl: int, vpr: int, lmul: int):
-    """Write (vl,) flat values back into a group; tail stays undisturbed."""
-    if vl <= vpr:
-        return v.at[reg, :vl].set(vals)
-    for g in range(lmul):
-        lo = g * vpr
-        if lo >= vl:
-            break
-        hi = min(vl, lo + vpr)
-        v = v.at[reg + g, :hi - lo].set(vals[lo:hi])
-    return v
-
-
-def _scatter_last_wins(mem, idx, vals, elem_ids):
-    """mem[idx[i]] = vals[i] with highest-element-index-wins collisions.
-
-    ``elem_ids`` are the global element indices (monotone in program
-    element order); the winner per address is the max id targeting it —
-    the deterministic rule all engines and the oracle share.
-    """
-    order = jnp.full(mem.shape, -1, jnp.int32).at[idx].max(
-        elem_ids.astype(jnp.int32))
-    win = order[idx] == elem_ids
-    contrib = jnp.zeros_like(mem).at[idx].add(jnp.where(win, vals, 0))
-    return jnp.where(order >= 0, contrib, mem)
-
-
-# ---------------------------------------------------------------------------
-# Reference engine (single device oracle)
-# ---------------------------------------------------------------------------
-
-
-class ReferenceEngine:
     def __init__(self, cfg: AraConfig, vlmax: Optional[int] = None,
-                 dtype=jnp.float64):
+                 dtype=jnp.float64, cache: Optional[staging.TraceCache] = None):
         self.cfg = cfg
         self.vlmax64 = vlmax or cfg.vlmax_dp
         self.dtype = dtype
+        self.cache = cache if cache is not None else staging.TRACE_CACHE
 
     # Back-compat alias: the 64-bit VLMAX the engine was sized for.
     @property
@@ -141,283 +108,106 @@ class ReferenceEngine:
     def vlmax_for(self, sew: int, lmul: int = 1) -> int:
         return self.vlmax64 * (64 // sew) * lmul
 
+    @property
+    def _storage(self):
+        return jax.dtypes.canonicalize_dtype(self.dtype)
+
+    def signature(self, window: int, mem_words: int, prog_len: int,
+                  batch: int) -> staging.Signature:
+        slots = self.vlmax_for(MIN_SEW) // self.lanes
+        return staging.Signature(
+            kind=self.kind, lanes=self.lanes, slots=slots, window=window,
+            mem_words=mem_words, prog_len=prog_len, batch=batch,
+            storage=jnp.dtype(self._storage).name, mesh_key=self.mesh_key)
+
+    def _window(self, rows) -> int:
+        """Flat element window for a batch: sized to the batch's max vl
+        (pow2-bucketed, lane-divisible) so short-vector programs don't pay
+        for the SEW=16 × LMUL=8 worst case."""
+        w = staging.bucket_pow2(int(rows["vl"].max(initial=1)), lo=8)
+        w = min(w, self.vlmax_for(MIN_SEW, max(isa.LMULS)))
+        return -(-w // self.lanes) * self.lanes
+
+    def run_many(self, programs: Sequence, memories: Sequence,
+                 sregs: Optional[Sequence[Optional[dict]]] = None,
+                 window: Optional[int] = None):
+        """Execute N programs in ONE device call (one compile per
+        signature). Returns ``(mems, sregs)``: a list of per-program
+        memory arrays (numpy, true sizes) and a list of scalar-register
+        dicts — results stay on-device across the batch and convert to
+        host numpy exactly once at this boundary.
+
+        ``window`` sets a minimum flat element window: callers sweeping a
+        vtype grid pass the grid-wide maximum so every cell lands on the
+        SAME signature (one compile for the whole sweep).
+        """
+        n = len(programs)
+        if len(memories) != n:
+            raise ValueError("run_many: len(programs) != len(memories)")
+        sregs = list(sregs) if sregs is not None else [None] * n
+        storage = self._storage
+
+        rows = staging.pack_tables(
+            [staging.encode_program(p, self.vlmax64) for p in programs])
+        flats = [np.asarray(m, storage).ravel() for m in memories]
+        sizes = np.array([f.shape[0] for f in flats], np.int32)
+        words = staging.bucket_pow2(int(sizes.max()))
+        mems = np.zeros((n, words), storage)
+        for i, f in enumerate(flats):
+            mems[i, :sizes[i]] = f
+        s0 = np.zeros((n, N_SREGS), storage)
+        for i, sr in enumerate(sregs):
+            for k, val in (sr or {}).items():
+                s0[i, k] = val
+
+        w = self._window(rows)
+        if window:
+            w = max(w, -(-int(window) // self.lanes) * self.lanes)
+        sig = self.signature(w, words, rows["op"].shape[1], n)
+        fn = self.cache.get(sig, lambda: staging.build_runner(
+            sig, self.cache.stats, mesh=self.mesh, axis=self.axis))
+        mem_out, s_out = fn(jnp.asarray(mems), jnp.asarray(s0),
+                            jnp.asarray(sizes),
+                            {k: jnp.asarray(a) for k, a in rows.items()})
+        mem_out, s_out = np.asarray(mem_out), np.asarray(s_out)
+        return ([mem_out[i, :sizes[i]] for i in range(n)],
+                [{k: s_out[i, k] for k in range(N_SREGS)} for i in range(n)])
+
     def run(self, program, memory, sregs: Optional[dict] = None):
-        mem = jnp.asarray(memory, self.dtype)
-        n_elems = self.vlmax_for(MIN_SEW)
-        v = jnp.zeros((isa.NUM_VREGS, n_elems), self.dtype)
-        s = dict(sregs or {})
-        vl, sew, lmul = self.vlmax64, 64, 1
-
-        def q(x, bits):
-            # HW-width rounding; storage stays the engine dtype
-            return _quantize(x, bits, self.dtype)
-
-        for ins in program:
-            t = type(ins)
-            isa.check_insn(ins, sew, lmul)
-            vpr = self.vlmax_for(sew)        # per-register capacity
-
-            def R(reg):
-                return _group_read(v, reg, vl, vpr, lmul)
-
-            def W(vv, reg, vals):
-                return _group_write(vv, reg, vals, vl, vpr, lmul)
-
-            if t is isa.VSETVL:
-                sew, lmul = ins.sew, ins.lmul
-                vl = min(ins.vl, self.vlmax_for(sew, lmul))
-            elif t is isa.VLD:
-                v = W(v, ins.vd,
-                      q(jax.lax.dynamic_slice(mem, (ins.addr,), (vl,)), sew))
-            elif t is isa.VLDS:
-                idx = ins.addr + ins.stride * jnp.arange(vl)
-                v = W(v, ins.vd, q(mem[idx], sew))
-            elif t in (isa.VGATHER, isa.VLUXEI):
-                # clamp like LaneEngine (and the test oracle): OOB indexed
-                # loads are UB in HW; the model pins them to the edges
-                idx = ins.addr + R(ins.vidx).astype(jnp.int32)
-                idx = jnp.clip(idx, 0, mem.shape[0] - 1)
-                v = W(v, ins.vd, q(mem[idx], sew))
-            elif t is isa.VLSEG:
-                base = ins.addr + ins.nf * jnp.arange(vl)
-                for f in range(ins.nf):
-                    v = W(v, ins.vd + f * lmul, q(mem[base + f], sew))
-            elif t is isa.VST:
-                mem = jax.lax.dynamic_update_slice(mem, R(ins.vs),
-                                                   (ins.addr,))
-            elif t is isa.VSSEG:
-                base = ins.addr + ins.nf * jnp.arange(vl)
-                for f in range(ins.nf):
-                    mem = mem.at[base + f].set(R(ins.vs + f * lmul))
-            elif t is isa.VSUXEI:
-                idx = ins.addr + R(ins.vidx).astype(jnp.int32)
-                idx = jnp.clip(idx, 0, mem.shape[0] - 1)
-                mem = _scatter_last_wins(mem, idx, R(ins.vs),
-                                         jnp.arange(vl))
-            elif t is isa.VFMA:
-                v = W(v, ins.vd, q(R(ins.va) * R(ins.vb) + R(ins.vd), sew))
-            elif t is isa.VFMA_VS:
-                v = W(v, ins.vd,
-                      q(s[ins.vs_scalar] * R(ins.vb) + R(ins.vd), sew))
-            elif t is isa.VFADD:
-                v = W(v, ins.vd, q(R(ins.va) + R(ins.vb), sew))
-            elif t is isa.VFMUL:
-                v = W(v, ins.vd, q(R(ins.va) * R(ins.vb), sew))
-            elif t is isa.VFWMUL:
-                v = W(v, ins.vd, q(R(ins.va) * R(ins.vb), _wide_bits(sew)))
-            elif t is isa.VFWMA:
-                v = W(v, ins.vd, q(R(ins.va) * R(ins.vb) + R(ins.vd),
-                                   _wide_bits(sew)))
-            elif t is isa.VFNCVT:
-                v = W(v, ins.vd, q(R(ins.vs), sew))
-            elif t is isa.VADD:
-                v = W(v, ins.vd, q(R(ins.va) + R(ins.vb), sew))
-            elif t is isa.VINS:
-                v = W(v, ins.vd,
-                      q(jnp.full((vl,), s[ins.scalar], self.dtype), sew))
-            elif t is isa.VEXT:
-                s[ins.sd] = R(ins.vs)[ins.idx]
-            elif t is isa.VSLIDE:
-                src = R(ins.vs)
-                slid = jnp.roll(src, -ins.amount)
-                mask = jnp.arange(vl) < (vl - ins.amount)
-                v = W(v, ins.vd, jnp.where(mask, slid, 0))
-            elif t is isa.LDSCALAR:
-                s[ins.sd] = mem[ins.addr]
-            else:
-                raise ValueError(ins)
-        return np.asarray(mem), s
+        mems, ss = self.run_many([program], [memory], [sregs])
+        return mems[0], ss[0]
 
 
-# ---------------------------------------------------------------------------
-# Lane-parallel engine (shard_map)
-# ---------------------------------------------------------------------------
+class ReferenceEngine(_StagedEngine):
+    """Single-device staged oracle (the lanes=1 degenerate layout)."""
+
+    kind = "ref"
 
 
-class LaneEngine:
+class LaneEngine(_StagedEngine):
     """Same semantics, vector registers physically lane-sharded.
 
-    Local layout: vregs (NUM_VREGS, lanes_local=1 per device, vlmax/lanes)
-    — device ``l`` holds elements l, l+lanes, l+2*lanes, ... (interleaved,
-    barber's-pole equivalent). Grouped operands concatenate each member
-    register's active slots, which reproduces the same interleaving over
-    the whole group. Memory is replicated (host DRAM analogue); stores
-    reconcile with psum/pmax, making the VLSU the single all-lane unit.
+    Local layout: device ``l`` holds elements l, l+lanes, l+2*lanes, ...
+    (interleaved, barber's-pole equivalent), preserved across register
+    groups. Memory is replicated (host DRAM analogue); stores reconcile
+    with psum/pmax, making the VLSU the single all-lane unit. The staged
+    step runs under one ``shard_map`` wrapped in the same signature cache,
+    so the whole differential grid shares one XLA compile.
     """
 
+    kind = "lane"
+
     def __init__(self, cfg: AraConfig, mesh, axis: str = "lanes",
-                 vlmax: Optional[int] = None, dtype=jnp.float32):
-        self.cfg = cfg
+                 vlmax: Optional[int] = None, dtype=jnp.float32,
+                 cache: Optional[staging.TraceCache] = None):
         self.mesh = mesh
         self.axis = axis
         self.lanes = mesh.shape[axis]
+        self.mesh_key = (axis, tuple(d.id for d in np.asarray(
+            mesh.devices).ravel()))
         vlmax = vlmax or cfg.vlmax_dp
-        self.vlmax64 = (vlmax // self.lanes) * self.lanes
-        self.dtype = dtype
-
-    @property
-    def vlmax(self) -> int:
-        return self.vlmax64
-
-    def vlmax_for(self, sew: int, lmul: int = 1) -> int:
-        return self.vlmax64 * (64 // sew) * lmul
-
-    def run(self, program, memory, sregs: Optional[dict] = None):
-        lanes = self.lanes
-        program = tuple(program)
-        sregs = dict(sregs or {})
-        n_s = 32                              # fixed scalar register file
-        s0 = np.zeros((n_s,), np.float64)
-        for k, val in sregs.items():
-            s0[k] = val
-
-        def device_fn(mem, svec):
-            lane = jax.lax.axis_index(self.axis)
-            e_max = self.vlmax_for(MIN_SEW) // lanes
-            v = jnp.zeros((isa.NUM_VREGS, e_max), self.dtype)
-            s = svec.astype(self.dtype)
-            vl, sew, lmul = self.vlmax64, 64, 1
-
-            def q(x, bits):
-                return _quantize(x, bits, self.dtype)
-
-            def store(mem, gidx, vals, valid):
-                # VLSU collect: scatter-add the valid contributions, count
-                # writers per address, reconcile across lanes via psum
-                gidx_safe = jnp.where(valid, gidx, 0)
-                vals = jnp.where(valid, vals, 0).astype(mem.dtype)
-                upd = jnp.zeros_like(mem).at[gidx_safe].add(vals)
-                cnt = jnp.zeros(mem.shape, jnp.int32).at[gidx_safe].add(
-                    valid.astype(jnp.int32))
-                upd = jax.lax.psum(upd, self.axis)
-                cnt = jax.lax.psum(cnt, self.axis)
-                return jnp.where(cnt > 0, upd, mem)
-
-            for ins in program:
-                t = type(ins)
-                isa.check_insn(ins, sew, lmul)
-                spr = self.vlmax_for(sew) // lanes   # slots/register/lane
-                nsl = spr * lmul                     # slots/group/lane
-                ids = lane + jnp.arange(nsl) * lanes  # global element ids
-                mask = ids < vl
-
-                def R(reg):
-                    if lmul == 1:
-                        return v[reg, :spr]
-                    return jnp.concatenate(
-                        [v[reg + g, :spr] for g in range(lmul)])
-
-                def W(vv, reg, flat):
-                    if lmul == 1:
-                        return vv.at[reg, :spr].set(flat)
-                    for g in range(lmul):
-                        vv = vv.at[reg + g, :spr].set(
-                            flat[g * spr:(g + 1) * spr])
-                    return vv
-
-                if t is isa.VSETVL:
-                    sew, lmul = ins.sew, ins.lmul
-                    vl = min(ins.vl, self.vlmax_for(sew, lmul))
-                elif t is isa.VLD:
-                    vals = q(mem[ins.addr + ids * mask], sew)
-                    v = W(v, ins.vd, jnp.where(mask, vals, 0))
-                elif t is isa.VLDS:
-                    vals = q(mem[ins.addr + ins.stride * ids * mask], sew)
-                    v = W(v, ins.vd, jnp.where(mask, vals, 0))
-                elif t in (isa.VGATHER, isa.VLUXEI):
-                    gidx = ins.addr + R(ins.vidx).astype(jnp.int32)
-                    gidx = jnp.clip(jnp.where(mask, gidx, 0), 0,
-                                    mem.shape[0] - 1)
-                    vals = q(mem[gidx], sew)
-                    v = W(v, ins.vd, jnp.where(mask, vals, 0))
-                elif t is isa.VLSEG:
-                    base = ins.addr + ins.nf * jnp.where(mask, ids, 0)
-                    for f in range(ins.nf):
-                        vals = q(mem[base + f], sew)
-                        v = W(v, ins.vd + f * lmul,
-                              jnp.where(mask, vals, 0))
-                elif t is isa.VST:
-                    gidx = ins.addr + ids
-                    v_ok = mask & (gidx < mem.shape[0])
-                    mem = store(mem, gidx, R(ins.vs), v_ok)
-                elif t is isa.VSSEG:
-                    for f in range(ins.nf):
-                        gidx = ins.addr + f + ins.nf * ids
-                        v_ok = mask & (gidx < mem.shape[0])
-                        mem = store(mem, gidx, R(ins.vs + f * lmul), v_ok)
-                elif t is isa.VSUXEI:
-                    gidx = ins.addr + R(ins.vidx).astype(jnp.int32)
-                    gidx = jnp.clip(jnp.where(mask, gidx, 0), 0,
-                                    mem.shape[0] - 1)
-                    # highest element wins: find each address's winning
-                    # element id globally (pmax), then contribute only it
-                    eid = jnp.where(mask, ids, -1).astype(jnp.int32)
-                    order = jnp.full(mem.shape, -1, jnp.int32) \
-                        .at[gidx].max(eid)
-                    order = jax.lax.pmax(order, self.axis)
-                    win = mask & (order[gidx] == ids)
-                    contrib = jnp.zeros_like(mem).at[
-                        jnp.where(win, gidx, 0)].add(
-                        jnp.where(win, R(ins.vs), 0).astype(mem.dtype))
-                    contrib = jax.lax.psum(contrib, self.axis)
-                    mem = jnp.where(order >= 0, contrib, mem)
-                elif t is isa.VFMA:
-                    v = W(v, ins.vd,
-                          q(R(ins.va) * R(ins.vb) + R(ins.vd), sew))
-                elif t is isa.VFMA_VS:
-                    v = W(v, ins.vd,
-                          q(s[ins.vs_scalar] * R(ins.vb) + R(ins.vd), sew))
-                elif t is isa.VFADD:
-                    v = W(v, ins.vd, q(R(ins.va) + R(ins.vb), sew))
-                elif t is isa.VFMUL:
-                    v = W(v, ins.vd, q(R(ins.va) * R(ins.vb), sew))
-                elif t is isa.VFWMUL:
-                    v = W(v, ins.vd,
-                          q(R(ins.va) * R(ins.vb), _wide_bits(sew)))
-                elif t is isa.VFWMA:
-                    v = W(v, ins.vd, q(R(ins.va) * R(ins.vb) + R(ins.vd),
-                                       _wide_bits(sew)))
-                elif t is isa.VFNCVT:
-                    v = W(v, ins.vd, q(R(ins.vs), sew))
-                elif t is isa.VADD:
-                    v = W(v, ins.vd, q(R(ins.va) + R(ins.vb), sew))
-                elif t is isa.VINS:
-                    v = W(v, ins.vd,
-                          q(jnp.full((nsl,), s[ins.scalar], self.dtype),
-                            sew))
-                elif t is isa.VEXT:
-                    hit = (ids == ins.idx) & mask
-                    val = jax.lax.psum(
-                        jnp.sum(jnp.where(hit, R(ins.vs), 0)),
-                        self.axis)                    # SLDU extract
-                    s = s.at[ins.sd].set(val)
-                elif t is isa.VSLIDE:
-                    # element i <- element i+amount: owner of i+amount is
-                    # lane (lane+amount) % lanes; ppermute through the SLDU
-                    k = ins.amount
-                    src_lane_off = k % lanes
-                    perm = [((l + src_lane_off) % lanes, l)
-                            for l in range(lanes)]
-                    moved = jax.lax.ppermute(R(ins.vs), self.axis, perm)
-                    # received data is lane (lane+k)%lanes's column; its
-                    # j-th slot is element (lane+k)%lanes + j*lanes; we need
-                    # element lane + i*lanes + k = base + (i + shift)*lanes
-                    shift = (lane + src_lane_off) // lanes + k // lanes
-                    rolled = jnp.roll(moved, -shift, axis=0)
-                    valid = (ids + k) < vl
-                    v = W(v, ins.vd, jnp.where(valid, rolled, 0))
-                elif t is isa.LDSCALAR:
-                    s = s.at[ins.sd].set(mem[ins.addr])
-                else:
-                    raise ValueError(ins)
-            return mem, s
-
-        from jax.sharding import PartitionSpec as PS
-        fn = shard_map(device_fn, mesh=self.mesh,
-                       in_specs=(PS(), PS()), out_specs=(PS(), PS()),
-                       check_vma=False)
-        mem, s = fn(jnp.asarray(memory, self.dtype), jnp.asarray(s0))
-        return np.asarray(mem), {k: np.asarray(s)[k] for k in range(n_s)}
+        super().__init__(cfg, (vlmax // self.lanes) * self.lanes,
+                         dtype=dtype, cache=cache)
 
 
 # ---------------------------------------------------------------------------
@@ -461,18 +251,16 @@ def simulate_timing(program, cfg: AraConfig,
     reg_start = {}          # vreg -> exec start (chaining reference)
     reg_end = {}
     sreg_end = {}
-    vl, sew, lmul = vlmax64, 64, 1
 
     cycles = 0.0
     n = 0
-    for ins in program:
+    # one host pre-pass resolves vtype and legality-checks every insn —
+    # the same pre-pass the engines encode through (staging.resolve_vtype)
+    for ins, vl, sew, lmul in staging.resolve_vtype(program, vlmax64):
         n += 1
         t = type(ins)
-        isa.check_insn(ins, sew, lmul)
         issue_t += ISSUE_COST.get(t, 1)
         if t is isa.VSETVL:
-            sew, lmul = ins.sew, ins.lmul
-            vl = min(ins.vl, vlmax64 * (64 // sew) * lmul)
             continue
         # one grouped instruction covers up to lmul * vlmax elements: the
         # per-element share of the issue slot shrinks by LMUL (§IV), which

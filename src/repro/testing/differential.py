@@ -16,11 +16,21 @@ agree on every legal program. This module packages the pieces so any test
   ``nf * lmul <= 8``. Out-of-bounds indexed accesses are deliberately
   *allowed*: clamp + highest-element-wins makes them deterministic, so
   the differential contract covers them too.
-- ``run_pair``: drive N programs through two executors and compare memory
-  and scalar-register results. On mismatch the failing (sew, lmul, seed)
-  triple is written to ``$DIFFERENTIAL_SEED_FILE`` (if set — CI uploads
-  it as an artifact) and the assertion names it, so any failure is
-  reproducible from the log alone.
+- ``run_cells``: the batched runner. Programs are generated per
+  SEW × LMUL cell and driven through two *batch* executors —
+  ``engine_batch`` wraps an engine's compile-once ``run_many`` (every
+  cell shares ONE compiled signature via the grid-wide ``window``), and
+  ``oracle_batch``/``per_program_batch`` wrap per-program executors —
+  then compared program by program. This is what makes the full
+  lane-pair grid cheap enough for tier-1: one XLA compile per engine
+  for the whole sweep instead of one per program.
+- ``run_pair``: the per-program spelling, kept for callers holding plain
+  ``(program, memory, sregs) -> (mem, sregs)`` callables; it groups the
+  same ``grid`` seed assignment into cells and delegates to
+  ``run_cells``. On mismatch the failing (sew, lmul, seed) triple is
+  written to ``$DIFFERENTIAL_SEED_FILE`` (if set — CI uploads it as an
+  artifact) and the assertion names it, so any failure is reproducible
+  from the log alone.
 
 Programs fix one vtype up front (plus the generator may not re-vsetvl):
 cross-vtype register reinterpretation is deliberately exercised by the
@@ -291,18 +301,124 @@ def grid(n_programs: int, sews: Sequence[int] = isa.SEWS,
         yield sew, lmul, seed0 + i
 
 
-def record_failure(sew: int, lmul: int, seed: int,
+def cells(n_per_cell: int, sews: Sequence[int] = isa.SEWS,
+          lmuls: Sequence[int] = isa.LMULS,
+          seed0: int = 0) -> Iterable[Tuple[int, int, list]]:
+    """(sew, lmul, seeds) blocks — the same seed assignment ``grid``
+    makes, grouped per cell so a whole cell batches through run_many."""
+    combos = [(s, l) for s in sews for l in lmuls]
+    for c, (sew, lmul) in enumerate(combos):
+        yield sew, lmul, [seed0 + c + k * len(combos)
+                          for k in range(n_per_cell)]
+
+
+def grid_window(vlmax64: int = VLMAX64) -> int:
+    """The grid-wide max vl: pass as run_many's ``window`` so every
+    SEW × LMUL cell shares one compiled signature."""
+    return vlmax64 * (64 // min(isa.SEWS)) * max(isa.LMULS)
+
+
+# --- batch executor adapters -----------------------------------------------
+
+
+def engine_batch(engine, window: Optional[int] = None):
+    """Batch runner over an engine's compile-once ``run_many``.
+
+    Defaults the flat window to the full-grid maximum, so sweeping the
+    whole SEW × LMUL grid costs ONE XLA compile per engine.
+    """
+    win = window or engine.vlmax_for(min(isa.SEWS), max(isa.LMULS))
+
+    def batch(progs, mems, sregs):
+        return engine.run_many(progs, mems, sregs, window=win)
+    return batch
+
+
+def per_program_batch(fn: Callable):
+    """Wrap a ``(program, memory, sregs) -> (mem, sregs)`` callable."""
+    def batch(progs, mems, sregs):
+        outs = [fn(p, m, s) for p, m, s in zip(progs, mems, sregs)]
+        return [o[0] for o in outs], [o[1] for o in outs]
+    return batch
+
+
+def oracle_batch(vlmax64: int = VLMAX64, storage=np.float32):
+    """Batch adapter for the (deliberately naive, per-program) oracle."""
+    return per_program_batch(
+        lambda p, m, s: numpy_oracle(p, m, vlmax64, sregs=s,
+                                     storage=storage))
+
+
+def record_failure(sew: int, lmul: int, seed,
                    path: Optional[str] = None) -> Optional[str]:
-    """Persist a failing grid point for CI artifact upload."""
+    """Persist a failing grid point for CI artifact upload.
+
+    ``seed`` is one int for a program-level mismatch, or the cell's seed
+    list when a whole batch failed and no single program can be blamed.
+    """
     path = path or os.environ.get("DIFFERENTIAL_SEED_FILE")
     if not path:
         return None
+    one = seed if isinstance(seed, int) else f"<each of {seed}>"
     with open(path, "w") as f:
         json.dump({"sew": sew, "lmul": lmul, "seed": seed,
                    "repro": "repro.testing.differential.random_program("
-                            f"np.random.RandomState({seed}), sew={sew}, "
+                            f"np.random.RandomState({one}), sew={sew}, "
                             f"lmul={lmul})"}, f, indent=2)
     return path
+
+
+def run_cells(batch_a: Callable, batch_b: Callable, cell_iter,
+              n_ops: int = 14, vlmax64: int = VLMAX64,
+              tol: Optional[dict] = None, label: str = "differential"):
+    """Drive random programs, one batch per SEW × LMUL cell, through two
+    batch executors and compare program by program.
+
+    ``batch_a`` / ``batch_b``: (programs, memories, sregs_list) ->
+    (memories_out, sregs_out). Compares memory to ``tol[sew]`` and scalar
+    registers on the keys both report. Returns the number of programs
+    checked; on mismatch the failing (sew, lmul, seed) triple is recorded
+    and named in the assertion.
+    """
+    tol = tol or TOL
+    checked = 0
+    for sew, lmul, seeds in cell_iter:
+        seeds = list(seeds)
+        progs, mems, srs = [], [], []
+        for seed in seeds:
+            p, m, s = random_program(np.random.RandomState(seed), sew,
+                                     lmul, n_ops=n_ops, vlmax64=vlmax64)
+            progs.append(p)
+            mems.append(m)
+            srs.append(s)
+        try:
+            mems_a, s_a = batch_a(progs, mems, [dict(s) for s in srs])
+            mems_b, s_b = batch_b(progs, mems, [dict(s) for s in srs])
+        except Exception as e:
+            # a batch failure can't be pinned on one program: record the
+            # whole cell's seed list so the CI artifact stays reproducing
+            where = record_failure(sew, lmul,
+                                   seeds[0] if len(seeds) == 1 else seeds)
+            note = f" (seed file: {where})" if where else ""
+            raise AssertionError(
+                f"{label}: executor failed at sew={sew} lmul={lmul} "
+                f"seeds={seeds}{note}: {e}") from e
+        for i, seed in enumerate(seeds):
+            try:
+                np.testing.assert_allclose(mems_a[i], mems_b[i],
+                                           rtol=tol[sew], atol=tol[sew])
+                for k in set(s_a[i]) & set(s_b[i]):
+                    np.testing.assert_allclose(
+                        float(s_a[i][k]), float(s_b[i][k]),
+                        rtol=tol[sew], atol=tol[sew])
+            except AssertionError as e:
+                where = record_failure(sew, lmul, seed)
+                note = f" (seed file: {where})" if where else ""
+                raise AssertionError(
+                    f"{label}: engines disagree at sew={sew} lmul={lmul} "
+                    f"seed={seed}{note}: {e}") from e
+            checked += 1
+    return checked
 
 
 def run_pair(run_a: Callable, run_b: Callable, n_programs: int,
@@ -310,31 +426,13 @@ def run_pair(run_a: Callable, run_b: Callable, n_programs: int,
              lmuls: Sequence[int] = isa.LMULS, seed0: int = 0,
              n_ops: int = 14, vlmax64: int = VLMAX64,
              tol: Optional[dict] = None, label: str = "differential"):
-    """Run ``n_programs`` random programs through two executors.
-
-    ``run_a`` / ``run_b``: (program, memory, sregs) -> (mem, sregs_out).
-    Compares memory exactly to ``tol[sew]`` and scalar registers on the
-    keys both report. Returns the number of programs checked.
+    """Run ``n_programs`` random programs through two per-program
+    executors: the ``grid`` seed assignment grouped into cells and
+    delegated to :func:`run_cells`. Returns the number checked.
     """
-    tol = tol or TOL
-    checked = 0
+    by_cell = {}
     for sew, lmul, seed in grid(n_programs, sews, lmuls, seed0):
-        r = np.random.RandomState(seed)
-        prog, mem, sregs = random_program(r, sew, lmul, n_ops=n_ops,
-                                          vlmax64=vlmax64)
-        try:
-            mem_a, s_a = run_a(prog, mem, dict(sregs))
-            mem_b, s_b = run_b(prog, mem, dict(sregs))
-            np.testing.assert_allclose(mem_a, mem_b, rtol=tol[sew],
-                                       atol=tol[sew])
-            for k in set(s_a) & set(s_b):
-                np.testing.assert_allclose(float(s_a[k]), float(s_b[k]),
-                                           rtol=tol[sew], atol=tol[sew])
-        except Exception as e:
-            where = record_failure(sew, lmul, seed)
-            note = f" (seed file: {where})" if where else ""
-            raise AssertionError(
-                f"{label}: engines disagree at sew={sew} lmul={lmul} "
-                f"seed={seed}{note}: {e}") from e
-        checked += 1
-    return checked
+        by_cell.setdefault((sew, lmul), []).append(seed)
+    return run_cells(per_program_batch(run_a), per_program_batch(run_b),
+                     [(s, l, seeds) for (s, l), seeds in by_cell.items()],
+                     n_ops=n_ops, vlmax64=vlmax64, tol=tol, label=label)

@@ -1,17 +1,18 @@
 """Cross-engine differential tests over the full SEW × LMUL grid.
 
-Drives repro.testing.differential (the reusable harness extracted from the
-PR-1 multiprecision tests) across engine pairs:
+Drives repro.testing.differential across engine pairs, batched per cell
+through the engines' compile-once ``run_many`` (PR 4's staged runtime):
 
-- ReferenceEngine vs numpy oracle: in-process and cheap (~0.6 s/program),
-  so tier-1 runs the acceptance-scale grid (>= 200 random programs).
-- LaneEngine vs ReferenceEngine: each random program traces a fresh
-  shard_map graph, and XLA compile dominates (~10-20 s/program on CPU),
-  so tier-1 covers every SEW × LMUL combination once per run and the
-  ``REPRO_DIFFERENTIAL_LANE_N`` env var scales the same grid to the full
-  200+ programs where wall-clock allows (scheduled CI, local soaks).
+- ReferenceEngine vs numpy oracle: 240 random programs (20 per cell),
+  ONE compiled signature for the whole sweep.
+- LaneEngine vs ReferenceEngine: the full lane-pair grid now runs in
+  tier-1 — 5 programs per SEW × LMUL cell by default (was 1, when every
+  program re-traced shard_map at ~15-20 s of XLA compile) — and the
+  subprocess asserts the whole grid cost exactly one compile per engine.
+  ``REPRO_DIFFERENTIAL_LANE_N`` still scales the total program count
+  (the weekly CI soak runs >= 200).
 
-Failures are reproducible from the log alone: run_pair names the
+Failures are reproducible from the log alone: run_cells names the
 (sew, lmul, seed) triple and, when ``DIFFERENTIAL_SEED_FILE`` is set
 (CI does), writes it to disk for artifact upload.
 """
@@ -27,33 +28,40 @@ from repro.core.vector_engine import ReferenceEngine
 from repro.testing import differential as diff
 from conftest import run_devices
 
-N_ORACLE_PROGRAMS = 204          # >= 200: the acceptance-scale grid
+N_PER_CELL_ORACLE = 20           # 240 total: the acceptance-scale grid
+N_PER_CELL_LANE = 5              # full lane-pair grid, every tier-1 run
 GRID_COMBOS = len(isa.SEWS) * len(isa.LMULS)
 
 
 def test_reference_vs_oracle_grid():
-    """>= 200 random SEW × LMUL programs: jnp engine == numpy oracle."""
+    """240 random SEW × LMUL programs: jnp engine == numpy oracle, the
+    whole grid batched through one compiled signature."""
     cfg = AraConfig(lanes=2)
     eng = ReferenceEngine(cfg, vlmax=diff.VLMAX64, dtype=jnp.float32)
-    checked = diff.run_pair(
-        lambda p, m, s: eng.run(p, m, sregs=s),
-        lambda p, m, s: diff.numpy_oracle(p, m, diff.VLMAX64, sregs=s),
-        N_ORACLE_PROGRAMS, label="reference-vs-oracle")
-    assert checked >= 200
+    checked = diff.run_cells(
+        diff.engine_batch(eng),
+        diff.oracle_batch(diff.VLMAX64),
+        diff.cells(N_PER_CELL_ORACLE), label="reference-vs-oracle")
+    assert checked == N_PER_CELL_ORACLE * GRID_COMBOS >= 200
 
 
 def test_lane_vs_reference_grid():
-    """shard_map LaneEngine == ReferenceEngine on every SEW × LMUL combo.
+    """shard_map LaneEngine == ReferenceEngine, >= 5 programs per
+    SEW × LMUL cell (one subprocess, fake devices, exact x64 tolerance).
 
-    One subprocess (fake devices), exact (x64) tolerance. Program count
-    defaults to one per grid combination — compile-bound, see module
-    docstring — and scales via REPRO_DIFFERENTIAL_LANE_N.
+    The staged runtime makes this cheap: both engines execute the whole
+    grid through ONE cached trace each (asserted below via the shared
+    cache's compile counter). REPRO_DIFFERENTIAL_LANE_N scales the total
+    program count for scheduled soaks.
     """
-    n = max(GRID_COMBOS, int(os.environ.get("REPRO_DIFFERENTIAL_LANE_N",
-                                            GRID_COMBOS)))
+    n = max(N_PER_CELL_LANE * GRID_COMBOS,
+            int(os.environ.get("REPRO_DIFFERENTIAL_LANE_N",
+                               N_PER_CELL_LANE * GRID_COMBOS)))
+    per_cell = -(-n // GRID_COMBOS)
     code = f"""
 import numpy as np, jax, jax.numpy as jnp
 from repro.configs.ara import AraConfig
+from repro.core import staging
 from repro.core.vector_engine import ReferenceEngine, LaneEngine
 from repro.testing import differential as diff
 cfg = AraConfig(lanes=2)
@@ -61,15 +69,16 @@ mesh = jax.sharding.Mesh(np.array(jax.devices()[:2]), ("lanes",))
 ref = ReferenceEngine(cfg, vlmax=diff.VLMAX64)
 lane = LaneEngine(cfg, mesh, vlmax=diff.VLMAX64, dtype=jnp.float64)
 tol = {{64: 1e-12, 32: 1e-12, 16: 1e-12}}
-checked = diff.run_pair(
-    lambda p, m, s: ref.run(p, m, sregs=s),
-    lambda p, m, s: lane.run(p, m, sregs=s),
-    {n}, n_ops=8, tol=tol, label="lane-vs-reference")
-print("LANE_DIFF_OK", checked)
+checked = diff.run_cells(
+    diff.engine_batch(ref), diff.engine_batch(lane),
+    diff.cells({per_cell}), n_ops=8, tol=tol, label="lane-vs-reference")
+stats = staging.TRACE_CACHE.stats
+assert stats.compiles == 2, stats   # one signature per engine, grid-wide
+print("LANE_DIFF_OK", checked, "compiles", stats.compiles)
 """
     out = run_devices(code, n_devices=2, x64=True,
-                      timeout=600 + 30 * n)
-    assert f"LANE_DIFF_OK {n}" in out
+                      timeout=600 + 2 * per_cell * GRID_COMBOS)
+    assert f"LANE_DIFF_OK {per_cell * GRID_COMBOS}" in out
 
 
 def test_generator_programs_are_legal_and_diverse():
@@ -93,6 +102,17 @@ def test_generator_programs_are_legal_and_diverse():
                 assert not kinds & {"VFWMUL", "VFWMA", "VFNCVT"}
             if lmul == 8:
                 assert not kinds & {"VLSEG", "VSSEG"}
+
+
+def test_cells_cover_the_same_seeds_as_grid():
+    """cells() is grid()'s seed assignment grouped per (sew, lmul) — the
+    batched and per-program spellings check identical program sets."""
+    n_per_cell = 3
+    want = {}
+    for sew, lmul, seed in diff.grid(n_per_cell * GRID_COMBOS):
+        want.setdefault((sew, lmul), []).append(seed)
+    got = {(s, l): seeds for s, l, seeds in diff.cells(n_per_cell)}
+    assert got == want
 
 
 def test_run_pair_reports_and_records_failing_seed(tmp_path, monkeypatch):

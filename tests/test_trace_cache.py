@@ -1,0 +1,158 @@
+"""Trace-cache contract for the staged engine runtime (PR 4 tentpole).
+
+The engines compile one executable per shape *signature* (lanes, register
+slots, element window, memory words, program length, batch, dtype) and
+cache it in an LRU shared across engines. Locked down here:
+
+- same-signature programs (different opcodes/operands/vtype) reuse the
+  compiled executable — asserted via the cache's compile counter, which
+  is bumped at trace time inside the executable itself;
+- signature changes (program-length bucket, batch size, register file
+  size) miss and compile fresh;
+- cached execution is bit-identical to a fresh compile across the whole
+  SEW × LMUL grid, and run_many's batched path is bit-identical to
+  one-at-a-time run();
+- legality checking happens once, on the host, at encode time — illegal
+  programs raise before anything is traced (and the pre-pass rejects
+  them even with an empty cache);
+- the LRU evicts oldest-used entries at maxsize.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.ara import AraConfig
+from repro.core import isa, staging
+from repro.core.vector_engine import ReferenceEngine
+from repro.testing import differential as diff
+
+CFG = AraConfig(lanes=2)
+
+
+def _engine(vlmax=8, cache=None, maxsize=64):
+    if cache is None:               # an empty TraceCache is falsy: len()
+        cache = staging.TraceCache(maxsize)
+    return ReferenceEngine(CFG, vlmax=vlmax, dtype=jnp.float32,
+                           cache=cache)
+
+
+def _prog(op, sew=32, lmul=2):
+    # vl=8 is reachable at every vtype here, so the element window —
+    # signature material — is identical across the variants below
+    return [isa.VSETVL(8, sew, lmul), isa.VLD(0, 0), op, isa.VST(0, 40)]
+
+
+def test_same_signature_reuses_compiled_executable():
+    """Four programs with different opcodes, operands AND vtype — same
+    shapes — run through one compile; opcodes are data, not structure."""
+    eng = _engine()
+    mem = np.arange(64, dtype=float)
+    outs = [eng.run(_prog(op, sew, lmul), mem)[0]
+            for op, sew, lmul in [(isa.VFMUL(0, 0, 0), 32, 2),
+                                  (isa.VFADD(0, 0, 0), 32, 2),
+                                  (isa.VADD(0, 0, 0), 64, 1),
+                                  (isa.VSLIDE(4, 0, 3), 16, 4)]]
+    st = eng.cache.stats
+    assert st.compiles == 1 and st.misses == 1 and st.hits == 3, st
+    assert not np.array_equal(outs[0], outs[1])   # really different progs
+
+
+def test_signature_changes_miss():
+    """Program-length bucket, batch size and register-file size are all
+    signature material: changing any of them compiles fresh."""
+    eng = _engine()
+    mem = np.arange(64, dtype=float)
+    eng.run(_prog(isa.VFMUL(2, 0, 0)), mem)
+    assert eng.cache.stats.misses == 1
+    # cross the program-length bucket (8 rows): new signature
+    long_prog = [isa.VSETVL(8, 32, 2)] + \
+        [isa.VFADD(0, 0, 0)] * 12 + [isa.VST(0, 40)]
+    eng.run(long_prog, mem)
+    assert eng.cache.stats.misses == 2
+    # batched entry (batch=2): new signature again
+    eng.run_many([_prog(isa.VFMUL(2, 0, 0))] * 2, [mem, mem])
+    assert eng.cache.stats.misses == 3
+    # a differently sized register file never collides
+    eng2 = _engine(vlmax=16, cache=eng.cache)
+    eng2.run(_prog(isa.VFMUL(2, 0, 0)), mem)
+    assert eng.cache.stats.misses == 4
+    assert eng.cache.stats.compiles == 4
+
+
+def test_cached_equals_fresh_bit_identical():
+    """Across the whole SEW × LMUL grid (one batch, one signature): a
+    cache hit, and a recompile after clearing the cache, both reproduce
+    the first run bit for bit."""
+    eng = _engine()
+    progs, mems, srs = [], [], []
+    combos = [(s, l) for s in isa.SEWS for l in isa.LMULS]
+    for i, (sew, lmul) in enumerate(combos):
+        p, m, s = diff.random_program(np.random.RandomState(7 + i),
+                                      sew, lmul, n_ops=10)
+        progs.append(p)
+        mems.append(m)
+        srs.append(s)
+    win = diff.grid_window(diff.VLMAX64)
+
+    def go():
+        return eng.run_many(progs, mems, [dict(s) for s in srs],
+                            window=win)
+
+    m1, s1 = go()
+    m2, s2 = go()                                 # hit
+    eng.cache.clear()
+    m3, s3 = go()                                 # fresh compile
+    assert eng.cache.stats.compiles == 2          # first + post-clear
+    for i in range(len(combos)):
+        assert np.array_equal(m1[i], m2[i]) and np.array_equal(m1[i], m3[i])
+        for k in range(32):
+            assert float(s1[i][k]) == float(s2[i][k]) == float(s3[i][k])
+
+
+def test_run_many_matches_run_bitwise():
+    """The vmap-batched entry point is bit-identical to one-at-a-time
+    execution — batching is a pure amortization, not a semantics knob."""
+    eng = _engine()
+    progs, mems, srs = [], [], []
+    for seed, (sew, lmul) in enumerate([(64, 1), (32, 2), (16, 4)]):
+        p, m, s = diff.random_program(np.random.RandomState(seed),
+                                      sew, lmul, n_ops=10)
+        progs.append(p)
+        mems.append(m)
+        srs.append(s)
+    win = diff.grid_window(diff.VLMAX64)
+    batch_m, batch_s = eng.run_many(progs, mems,
+                                    [dict(s) for s in srs], window=win)
+    for i in range(len(progs)):
+        m1, s1 = eng.run(progs[i], mems[i], dict(srs[i]))
+        assert np.array_equal(batch_m[i], m1)
+        for k in range(32):
+            assert float(batch_s[i][k]) == float(s1[k])
+
+
+def test_illegal_program_raises_on_host_before_tracing():
+    """Legality lives in the encode pre-pass: an illegal program raises
+    ValueError without compiling anything (empty cache stays empty)."""
+    eng = _engine()
+    with pytest.raises(ValueError):
+        eng.run([isa.VSETVL(8, 64, 2), isa.VFADD(1, 2, 4)], np.zeros(64))
+    with pytest.raises(ValueError):
+        eng.run([isa.VSETVL(8, 64), isa.VFWMUL(4, 1, 2)], np.zeros(64))
+    assert len(eng.cache) == 0
+    assert eng.cache.stats.compiles == 0
+
+
+def test_lru_evicts_oldest():
+    cache = staging.TraceCache(maxsize=2)
+    eng = _engine(cache=cache)
+    mem = np.arange(64, dtype=float)
+    p_short = _prog(isa.VFMUL(2, 0, 0))
+    p_long = [isa.VSETVL(8, 32, 2)] + \
+        [isa.VFADD(0, 0, 0)] * 12 + [isa.VST(0, 40)]
+    eng.run(p_short, mem)                         # sig A
+    eng.run(p_long, mem)                          # sig B
+    eng.run_many([p_short] * 2, [mem, mem])       # sig C -> evicts A
+    assert len(cache) == 2
+    eng.run(p_short, mem)                         # A again: recompile
+    assert cache.stats.misses == 4
+    assert cache.stats.hits == 0
