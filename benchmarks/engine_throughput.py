@@ -13,8 +13,12 @@ differential programs of one shape *signature* through
 
 Reports programs/sec and the shared cache's compile counter for each
 path, plus the cached_batched/uncached speedup — the acceptance bar is
->= 10×. Results land in ``BENCH_engines.json`` (CI uploads it as an
-artifact) and print as ``engine_throughput,key=value,...`` lines.
+>= 10× (unchanged). A second sweep records programs/sec for every
+SEW=8 cell (lmul ∈ {mf4, mf2, 1, 2, 4, 8}) on the cached+batched path
+under ``int8_cells``, so the integer-lane rows of the differential grid
+are tracked alongside. Results land in ``BENCH_engines.json`` (CI
+uploads it as an artifact) and print as
+``engine_throughput,key=value,...`` lines.
 
   PYTHONPATH=src python benchmarks/engine_throughput.py \
       [--n 24] [--sew 32] [--lmul 2] [--uncached-n 3] \
@@ -33,7 +37,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.ara import AraConfig
-from repro.core import staging
+from repro.core import isa, staging
 from repro.testing import differential as diff
 from repro.core.vector_engine import ReferenceEngine
 
@@ -91,6 +95,21 @@ def bench(n=24, sew=32, lmul=2, uncached_n=3, reps=3):
     batched = _rate(n * reps, time.perf_counter() - t0, stats.compiles)
     batched["compile_seconds_first_call"] = round(compile_s, 4)
 
+    # SEW=8 cells: one batched run_many per legal lmul at the grid-wide
+    # window, so every cell hits the one cached signature (the integer
+    # lane rides the same compiled executable as the float grid)
+    int8_cells = {}
+    eng.cache.clear()
+    stats.reset()
+    for _, lm8 in diff.vtype_combos(sews=(8,)):
+        p8, m8, s8 = make_batch(n, 8, lm8)
+        eng.run_many(p8, m8, [dict(s) for s in s8], window=win)  # warm
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            eng.run_many(p8, m8, [dict(s) for s in s8], window=win)
+        int8_cells[isa.format_lmul(lm8)] = _rate(
+            n * reps, time.perf_counter() - t0, stats.compiles)
+
     return {
         "bench": "engine_throughput",
         "engine": "reference(staged)",
@@ -102,6 +121,7 @@ def bench(n=24, sew=32, lmul=2, uncached_n=3, reps=3):
         "uncached": uncached,
         "cached": cached,
         "cached_batched": batched,
+        "int8_cells": int8_cells,
         "speedup_cached_batched_vs_uncached": round(
             batched["programs_per_sec"] / uncached["programs_per_sec"], 1),
         "speedup_cached_vs_uncached": round(
@@ -126,6 +146,10 @@ def main():
         row = {"path": path, **res[path]}
         print("engine_throughput," +
               ",".join(f"{k}={v}" for k, v in row.items()), flush=True)
+    for lm, row in res["int8_cells"].items():
+        print("engine_throughput," +
+              ",".join(f"{k}={v}" for k, v in
+                       {"path": f"int8_{lm}", **row}.items()), flush=True)
     print(f"engine_throughput,path=speedup,"
           f"cached_batched_vs_uncached="
           f"{res['speedup_cached_batched_vs_uncached']}")

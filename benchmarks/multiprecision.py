@@ -1,14 +1,19 @@
 """Multi-precision sweep (§III-E4): dtype × size, three rulers.
 
-1. Analytical Ara model: matmul FLOP/cycle at SEW 64/32/16 from
+1. Analytical Ara model: matmul FLOP/cycle at SEW 64/32/16/8 from
    perfmodel.matmul_cycles(ew_bits=) — the datapath-split prediction.
 2. Instruction scoreboard: simulate_timing over the SEW-parameterized
-   matmul program (FPU-bound: fixed vlmax so strip counts match).
-3. TPU kernels: wall time of the Pallas matmul at fp32/bf16/f16 per size.
-   On TPU this is the real MXU rate; on CPU hosts the kernels drop to the
-   jnp reference path (interpret mode is a correctness tool, not a perf
-   path) so achieved speedups there measure the host BLAS, not the MXU —
-   the backend is stamped on every row.
+   matmul program (FPU-bound: fixed vlmax so strip counts match). The
+   SEW=8 row runs ``isa.imatmul_program`` — the op set has no integer
+   MACC, so each accumulation is VMUL+VADD (two ALU slots) and the
+   achieved speedup honestly lands near half the raw 8× datapath split.
+3. TPU kernels: wall time of the Pallas matmul at fp32/bf16/f16 per
+   size, plus the int8 row (``matmul_int8``: int32 accumulation — the
+   v5e 394-TOPS path). On TPU this is the real MXU rate; on CPU hosts
+   the kernels drop to the jnp reference path (interpret mode is a
+   correctness tool, not a perf path) so achieved speedups there measure
+   the host BLAS/GEMM, not the MXU — the backend is stamped on every
+   row.
 
 Every row carries ``predicted_speedup`` from the shared
 precision.ARA_FLOP_PER_CYCLE_PER_LANE table so achieved vs predicted can
@@ -57,8 +62,13 @@ def scoreboard_rows(lanes=2, n=256):
     out = []
     base = None
     for sew in SEWS:
-        prog = isa.matmul_program(n, 0, n * n, 2 * n * n, t=4, vlmax=n,
-                                  sew=sew)
+        if sew in isa.FP_SEWS:
+            prog = isa.matmul_program(n, 0, n * n, 2 * n * n, t=4,
+                                      vlmax=n, sew=sew)
+        else:
+            # SEW=8: the integer spelling (VMUL+VADD, no int MACC)
+            prog = isa.imatmul_program(n, 0, n * n, 2 * n * n, t=4,
+                                       vlmax=n)
         tr = simulate_timing(prog, cfg, vlmax=n)
         fpc = tr.flop_per_cycle(flops)
         if base is None:
@@ -114,6 +124,25 @@ def kernel_rows(sizes=(256, 512)):
                 "predicted_speedup": round(
                     ara_speedup_vs_dp(sew) / ara_speedup_vs_dp(32), 3),
             })
+        # int8 row: int32-accumulating GEMM (matmul_int8 on TPU; the jnp
+        # integer dot on CPU hosts, where "gflops" reads as GOPS)
+        a8 = jnp.asarray(rng.randint(-64, 64, (n, n)), jnp.int8)
+        b8 = jnp.asarray(rng.randint(-64, 64, (n, n)), jnp.int8)
+        if on_tpu:
+            fn = jax.jit(lambda x, y: ops.matmul_int8(x, y))
+        else:
+            fn = jax.jit(lambda x, y: jnp.dot(
+                x, y, preferred_element_type=jnp.int32))
+        secs = _time(fn, a8, b8)
+        out.append({
+            "source": f"pallas_{backend}", "n": n, "dtype": "int8",
+            "sew_equiv": 8,
+            "us_per_call": round(secs * 1e6, 1),
+            "gflops": round(flops / secs / 1e9, 2),
+            "achieved_speedup": round(base_s / secs, 3),
+            "predicted_speedup": round(
+                ara_speedup_vs_dp(8) / ara_speedup_vs_dp(32), 3),
+        })
     return out
 
 

@@ -7,6 +7,7 @@ Table III.
 from __future__ import annotations
 
 import dataclasses
+from fractions import Fraction
 
 
 @dataclasses.dataclass(frozen=True)
@@ -36,13 +37,15 @@ class AraConfig:
         """Max DP elements per vector register (VRF split over 32 regs)."""
         return self.vlmax(64)
 
-    def vlmax(self, sew_bits: int = 64, lmul: int = 1) -> int:
+    def vlmax(self, sew_bits: int = 64, lmul=1) -> int:
         """Max elements per vector operand at a given SEW and LMUL:
         registers are fixed-size byte slices of the VRF, so halving the
         element width doubles the element capacity (§III-E4), and an
-        LMUL-register group holds LMUL× more (RVV 1.0 grouping)."""
+        LMUL-register group holds LMUL× more (RVV 1.0 grouping).
+        Fractional LMUL (mf2/mf4) floors exactly — a Fraction, never a
+        float, so the RVV fractional-VLMAX floor is bit-precise."""
         total_bytes = self.lanes * self.vrf_kib_per_lane * 1024
-        return total_bytes // 32 // (sew_bits // 8) * lmul
+        return int(total_bytes // 32 // (sew_bits // 8) * Fraction(lmul))
 
     def peak_flop_per_cycle(self, ew_bits: int = 64) -> int:
         """Multi-precision: the 64-bit datapath subdivides (64/ew) ways.

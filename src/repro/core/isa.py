@@ -7,19 +7,54 @@ core/perfmodel.py).
 
 Functional-unit mapping follows Fig. 3b:
   FPU  — VFMA/VFADD/VFMUL/VFWMUL/VFWMA/VFNCVT  (64 bit/lane/cycle)
-  ALU  — VADD/VMUL/logic           (shares paths with SLDU)
+  ALU  — VADD/VSUB/VMUL + fixed-point VSADDU/VSADD/VSSUB/VSMUL
+         (64 bit/lane/cycle, shares paths with SLDU)
   SLDU — VSLIDE/VINS/VEXT          (touches all lanes)
   VLSU — VLD/VST/VLDS/VGATHER      (single memory port, W = 32*lanes bit)
 
 Multi-precision / SEW semantics (§III-E4)
 -----------------------------------------
 ``VSETVL(vl, sew)`` sets both the vector length AND the selected element
-width. SEW ∈ {64, 32, 16} bit; the 64-bit lane datapath subdivides into
-64/SEW parallel sub-words (1×64 / 2×32 / 4×16), so peak FLOP/cycle — and
-the scoreboard's FPU occupancy — scale by 64/SEW. VLMAX likewise scales:
-a vector register is a fixed number of BYTES (VRF bytes / 32 regs), so it
-holds (64/SEW)× more elements at narrower widths; the engines expose this
-via ``AraConfig.vlmax(sew)``.
+width. SEW ∈ {64, 32, 16, 8} bit; the 64-bit lane datapath subdivides
+into 64/SEW parallel sub-words (1×64 / 2×32 / 4×16 / 8×8), so peak
+op/cycle — and the scoreboard's FPU/ALU occupancy — scale by 64/SEW.
+VLMAX likewise scales: a vector register is a fixed number of BYTES (VRF
+bytes / 32 regs), so it holds (64/SEW)× more elements at narrower
+widths; the engines expose this via ``AraConfig.vlmax(sew)``.
+
+Integer / fixed-point op class (SEW ∈ {32, 16, 8})
+--------------------------------------------------
+``VADD``/``VSUB``/``VMUL`` are two's-complement integer ops: results wrap
+modulo 2^SEW (the RVV integer contract). The RVV fixed-point subset —
+``VSADDU``/``VSADD``/``VSSUB`` (saturating add/sub) and ``VSMUL``
+(fractional multiply: ``sat((a*b + 2^(SEW-2)) >> (SEW-1))``) — clamps to
+the type extremes instead and sets the *sticky* ``vxsat`` flag, modeled
+as scalar register ``VXSAT_SREG`` (31): once any element of any
+saturating op clamps, it reads 1 for the rest of the program. ``vxrm``
+is fixed at round-to-nearest-up (rnu, the RVV reset default): add half,
+then floor — ties round toward +inf, so ``VSMUL(0x80, 0x80)`` at SEW=8
+is the classic corner (product 2^14 rounds past the int8 maximum:
+result 0x7F, vxsat set).
+
+Integer ops are legal at SEW ∈ {32, 16, 8} and float ops at
+SEW ∈ {64, 32, 16}: there is no FP8 format (Ara's FPU stops at f16),
+and int64 values would not round-trip the engines' float storage, so
+the model pins integer ELEN at 32 — a documented model deviation (see
+docs/isa.md). Both rules live in ``check_insn`` like every other
+legality rule.
+
+Register grouping also comes in *fractional* flavors (RVV 1.0):
+LMUL ∈ {mf4, mf2, 1, 2, 4, 8}, where ``mf2``/``mf4`` (exact
+``Fraction(1, 2)``/``Fraction(1, 4)``) use half/quarter of one register
+— VLMAX floors to ``lmul * vlmax(sew)`` and a fractional group still
+reserves one whole architectural register (``group_span``). The vtype
+is legal iff SEW/LMUL <= ELEN (=64): mf4 at SEW=64 or 32 is illegal,
+mf2 at SEW=64 is illegal. Fractional LMUL exists for mixed-width loops
+(int8 operands feeding int32 accumulators): the narrow operand groups
+at EMUL = lmul * sew_narrow/sew_wide so the wide accumulator's LMUL
+does not cap the narrow side (``stripmine.mixed_width_lmul``). Use
+``parse_lmul("mf2")`` / ``format_lmul`` to convert the assembly
+spelling; internally lmul is a signed power of two (``lmul_exp``).
 
 Arithmetic executes at SEW precision: every result is rounded to the
 SEW-wide float format (f64/f32/f16) before it lands in the register file,
@@ -65,11 +100,79 @@ deterministic contract every engine and the oracle share.
 from __future__ import annotations
 
 import dataclasses
+from fractions import Fraction
 from typing import Optional
 
 NUM_VREGS = 32
-SEWS = (64, 32, 16)              # supported selected element widths (bits)
-LMULS = (1, 2, 4, 8)             # supported register-group multipliers
+SEWS = (64, 32, 16, 8)           # supported selected element widths (bits)
+FP_SEWS = (64, 32, 16)           # float formats (no FP8: the FPU stops at f16)
+INT_SEWS = (32, 16, 8)           # integer sub-word widths (model ELEN_INT=32)
+ELEN = 64                        # widest element the datapath moves
+# register-group multipliers, smallest first; mf4/mf2 are the RVV 1.0
+# fractional groupings (exact binary fractions, never floats in keys)
+LMULS = (Fraction(1, 4), Fraction(1, 2), 1, 2, 4, 8)
+VXSAT_SREG = 31                  # scalar reg shadowing the sticky vxsat CSR
+
+
+def parse_lmul(text):
+    """Parse an LMUL spelling: ``"mf2"``/``"mf4"``/``"m2"``/``"2"``/2/0.5.
+
+    Returns the canonical value — an ``int`` for integer groupings, an
+    exact ``Fraction`` for fractional ones (floats 0.5/0.25 are exact
+    binary fractions, so they normalize losslessly).
+    """
+    if isinstance(text, str):
+        t = text.strip().lower()
+        if t.startswith("mf"):
+            f = Fraction(1, int(t[2:]))
+        elif t.startswith("m"):
+            f = Fraction(int(t[1:]))
+        else:
+            f = Fraction(t)
+    else:
+        f = Fraction(text)
+    return f.numerator if f.denominator == 1 else f
+
+
+def format_lmul(lmul) -> str:
+    """RVV assembly spelling: m1/m2/m4/m8 and mf2/mf4 — never 0.5/0.25."""
+    try:
+        f = Fraction(lmul)
+    except (TypeError, ValueError):
+        return str(lmul)
+    if f.numerator == 1 and f.denominator > 1:
+        return f"mf{f.denominator}"
+    if f.denominator == 1:
+        return f"m{f.numerator}"
+    return str(lmul)
+
+
+def lmul_exp(lmul) -> int:
+    """vtype encoding: LMUL as a signed power-of-two exponent (RVV vlmul
+    field semantics): mf4 -> -2, mf2 -> -1, 1 -> 0, ... 8 -> 3."""
+    f = Fraction(lmul)
+    if f.numerator == 1 and f.denominator > 1:
+        return 1 - f.denominator.bit_length()
+    return f.numerator.bit_length() - 1
+
+
+def lmul_from_exp(e: int):
+    """Inverse of :func:`lmul_exp`."""
+    return (1 << e) if e >= 0 else Fraction(1, 1 << -e)
+
+
+def group_span(lmul) -> int:
+    """Architectural registers a group occupies: LMUL when integer; ONE
+    register (partially used) for fractional LMUL — RVV reserves the
+    whole register even when EMUL < 1."""
+    return max(1, int(Fraction(lmul)))
+
+
+def grouped_vlmax(vlmax64: int, sew: int, lmul=1) -> int:
+    """VLMAX at a vtype: the per-register 64-bit capacity times the
+    datapath subdivision, scaled by the grouping — floored exactly for
+    fractional LMUL (the RVV fractional-VLMAX floor)."""
+    return int(vlmax64 * (64 // sew) * Fraction(lmul))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -203,8 +306,56 @@ class VFNCVT(Insn):              # narrowing convert: vd(sew) <- vs(2*sew)
 
 
 @dataclasses.dataclass(frozen=True)
-class VADD(Insn):                # integer ALU
+class VADD(Insn):                # integer add, wraps mod 2^SEW
     vd: int
+    va: int
+    vb: int
+    unit = "alu"
+
+
+@dataclasses.dataclass(frozen=True)
+class VSUB(Insn):                # integer subtract, wraps mod 2^SEW
+    vd: int
+    va: int
+    vb: int
+    unit = "alu"
+
+
+@dataclasses.dataclass(frozen=True)
+class VMUL(Insn):                # integer multiply, wraps mod 2^SEW
+    vd: int
+    va: int
+    vb: int
+    unit = "alu"
+
+
+@dataclasses.dataclass(frozen=True)
+class VSADDU(Insn):              # saturating unsigned add (fixed-point)
+    vd: int
+    va: int
+    vb: int
+    unit = "alu"
+
+
+@dataclasses.dataclass(frozen=True)
+class VSADD(Insn):               # saturating signed add
+    vd: int
+    va: int
+    vb: int
+    unit = "alu"
+
+
+@dataclasses.dataclass(frozen=True)
+class VSSUB(Insn):               # saturating signed subtract
+    vd: int
+    va: int
+    vb: int
+    unit = "alu"
+
+
+@dataclasses.dataclass(frozen=True)
+class VSMUL(Insn):               # fractional multiply: sat((a*b + rnd) >> SEW-1)
+    vd: int                      # vxrm fixed at rnu; saturation sets vxsat
     va: int
     vb: int
     unit = "alu"
@@ -259,6 +410,12 @@ _VOPS = {
     VFADD: (("vd", False, "w"), ("va", False, "r"), ("vb", False, "r")),
     VFMUL: (("vd", False, "w"), ("va", False, "r"), ("vb", False, "r")),
     VADD: (("vd", False, "w"), ("va", False, "r"), ("vb", False, "r")),
+    VSUB: (("vd", False, "w"), ("va", False, "r"), ("vb", False, "r")),
+    VMUL: (("vd", False, "w"), ("va", False, "r"), ("vb", False, "r")),
+    VSADDU: (("vd", False, "w"), ("va", False, "r"), ("vb", False, "r")),
+    VSADD: (("vd", False, "w"), ("va", False, "r"), ("vb", False, "r")),
+    VSSUB: (("vd", False, "w"), ("va", False, "r"), ("vb", False, "r")),
+    VSMUL: (("vd", False, "w"), ("va", False, "r"), ("vb", False, "r")),
     VFWMUL: (("vd", True, "w"), ("va", False, "r"), ("vb", False, "r")),
     VFWMA: (("vd", True, "rw"), ("va", False, "r"), ("vb", False, "r")),
     VFNCVT: (("vd", False, "w"), ("vs", True, "r")),
@@ -268,13 +425,34 @@ _VOPS = {
 }
 
 _WIDENING_OPS = (VFWMUL, VFWMA)
+_FP_OPS = (VFMA, VFMA_VS, VFADD, VFMUL, VFWMUL, VFWMA, VFNCVT)
+_INT_OPS = (VADD, VSUB, VMUL, VSADDU, VSADD, VSSUB, VSMUL)
+_SAT_OPS = (VSADDU, VSADD, VSSUB, VSMUL)
 
 
-def check_vtype(sew: int, lmul: int = 1):
+def check_vtype(sew: int, lmul=1):
     if sew not in SEWS:
         raise ValueError(f"unsupported SEW {sew}")
     if lmul not in LMULS:
-        raise ValueError(f"unsupported LMUL {lmul}")
+        raise ValueError(f"unsupported LMUL {format_lmul(lmul)}")
+    if Fraction(sew) / Fraction(lmul) > ELEN:
+        raise ValueError(
+            f"SEW={sew} at LMUL={format_lmul(lmul)} illegal: "
+            f"SEW/LMUL exceeds ELEN={ELEN}")
+
+
+def vtype_legal(sew: int, lmul=1) -> bool:
+    """Non-raising spelling of :func:`check_vtype` for grid builders."""
+    try:
+        check_vtype(sew, lmul)
+    except ValueError:
+        return False
+    return True
+
+
+def legal_vtypes(sews=SEWS, lmuls=LMULS):
+    """Every legal (sew, lmul) cell of the grid, in grid order."""
+    return tuple((s, l) for s in sews for l in lmuls if vtype_legal(s, l))
 
 
 def _check_group(base: int, span: int, what: str):
@@ -287,22 +465,25 @@ def _check_group(base: int, span: int, what: str):
             f"{NUM_VREGS}-register file")
 
 
-def reg_groups(ins, lmul: int = 1):
+def reg_groups(ins, lmul=1):
     """Vector register groups an instruction touches at the current vtype.
 
     Returns ``(reads, writes)``: lists of ``(base, span)`` pairs, spans in
-    architectural registers (wide operands span 2*LMUL — the EMUL rule).
+    architectural registers (wide operands span ``group_span(2*lmul)`` —
+    the EMUL rule; fractional groups reserve one whole register).
     Segment ops expand to one group per field.
     """
     t = type(ins)
+    span = group_span(lmul)
+    wspan = group_span(2 * Fraction(lmul))
     reads, writes = [], []
     if t is VLSEG:
-        writes += [(ins.vd + f * lmul, lmul) for f in range(ins.nf)]
+        writes += [(ins.vd + f * span, span) for f in range(ins.nf)]
     elif t is VSSEG:
-        reads += [(ins.vs + f * lmul, lmul) for f in range(ins.nf)]
+        reads += [(ins.vs + f * span, span) for f in range(ins.nf)]
     else:
         for attr, wide, mode in _VOPS.get(t, ()):
-            grp = (getattr(ins, attr), 2 * lmul if wide else lmul)
+            grp = (getattr(ins, attr), wspan if wide else span)
             if "r" in mode:
                 reads.append(grp)
             if "w" in mode:
@@ -314,44 +495,58 @@ def _overlaps(a, b):
     return a[0] < b[0] + b[1] and b[0] < a[0] + a[1]
 
 
-def check_insn(ins, sew: int, lmul: int = 1):
+def check_insn(ins, sew: int, lmul=1):
     """Raise ValueError if ``ins`` is illegal at the current vtype.
 
     Encodes the RVV 1.0 rules the module docstring describes: group
     alignment, the widening EMUL=2*LMUL reservation and its source-overlap
-    prohibition, the narrowing lowest-part overlap exception, and the
-    segment-op ``nf * lmul <= 8`` span limit.
+    prohibition (EMUL stays a *product* — 2·mf4 = mf2, 2·mf2 = m1 — so
+    fractional widening reserves one register), the narrowing lowest-part
+    overlap exception, the segment-op ``nf * lmul <= 8`` span limit, and
+    the op-class SEW gates: float ops need a float format (SEW >= 16),
+    integer/fixed-point ops an exactly-representable width (SEW <= 32).
     """
     t = type(ins)
     name = t.__name__
     if t is VSETVL:
         check_vtype(ins.sew, ins.lmul)
         return
+    span = group_span(lmul)
+    wspan = group_span(2 * Fraction(lmul))
+    if t in _FP_OPS and sew not in FP_SEWS:
+        raise ValueError(
+            f"{name} illegal at SEW={sew} (no FP8 format: float ops need "
+            f"SEW in {FP_SEWS})")
+    if t in _INT_OPS and sew not in INT_SEWS:
+        raise ValueError(
+            f"{name} illegal at SEW={sew} (integer ops model int8/16/32 "
+            f"sub-words; int64 would not round-trip the engines' float "
+            f"storage)")
     if t in _WIDENING_OPS or t is VFNCVT:
         if sew == max(SEWS):
             raise ValueError(
                 f"{name} illegal at SEW={sew} (2*SEW exceeds ELEN=64)")
-        if 2 * lmul > max(LMULS):
+        if 2 * Fraction(lmul) > max(LMULS):
             raise ValueError(
-                f"{name} illegal at LMUL={lmul} (EMUL=2*LMUL exceeds "
-                f"{max(LMULS)})")
+                f"{name} illegal at LMUL={format_lmul(lmul)} "
+                f"(EMUL=2*LMUL exceeds {max(LMULS)})")
     if t in (VLSEG, VSSEG):
-        if ins.nf < 1 or ins.nf * lmul > max(LMULS):
+        if ins.nf < 1 or ins.nf * Fraction(lmul) > max(LMULS):
             raise ValueError(
-                f"{name}: nf={ins.nf} illegal at LMUL={lmul} "
+                f"{name}: nf={ins.nf} illegal at LMUL={format_lmul(lmul)} "
                 f"(need 1 <= nf*lmul <= {max(LMULS)})")
     reads, writes = reg_groups(ins, lmul)
-    for base, span in reads + writes:
-        _check_group(base, span, name)
+    for base, sp in reads + writes:
+        _check_group(base, sp, name)
     if t in _WIDENING_OPS:
-        dst = (ins.vd, 2 * lmul)
-        for src in ((ins.va, lmul), (ins.vb, lmul)):
+        dst = (ins.vd, wspan)
+        for src in ((ins.va, span), (ins.vb, span)):
             if _overlaps(dst, src):
                 raise ValueError(
-                    f"{name}: wide destination v{ins.vd} (span {2 * lmul}) "
+                    f"{name}: wide destination v{ins.vd} (span {wspan}) "
                     f"overlaps narrow source v{src[0]}")
     if t is VFNCVT:
-        dst, src = (ins.vd, lmul), (ins.vs, 2 * lmul)
+        dst, src = (ins.vd, span), (ins.vs, wspan)
         if _overlaps(dst, src) and ins.vd != ins.vs:
             raise ValueError(
                 f"VFNCVT: destination v{ins.vd} overlaps wide source "
@@ -375,15 +570,17 @@ def validate_program(program):
 
 def daxpy_program(n: int, x_addr: int, y_addr: int, alpha_sreg: int = 0,
                   vlmax: Optional[int] = None, sew: int = 64,
-                  lmul: int = 1):
+                  lmul=1):
     """Y <- alpha*X + Y, strip-mined (Fig. 9 style).
 
     ``vlmax`` is the per-register VLMAX at ``sew``; grouping multiplies the
-    strip length by ``lmul`` (fewer trips, longer chains). Registers are
-    picked LMUL-aligned: x in v[lmul], y in v[2*lmul], alpha in v[3*lmul].
+    strip length by ``lmul`` (fewer trips, longer chains — fractional LMUL
+    shrinks it, the honest cost of sub-register groups). Registers are
+    picked span-aligned: x in v[span], y in v[2*span], alpha in v[3*span].
     """
-    vlmax = (vlmax or n) * lmul
-    vx, vy, va = lmul, 2 * lmul, 3 * lmul
+    span = group_span(lmul)
+    vlmax = max(1, int((vlmax or n) * Fraction(lmul)))
+    vx, vy, va = span, 2 * span, 3 * span
     prog = []
     c = 0
     while c < n:
@@ -400,19 +597,20 @@ def daxpy_program(n: int, x_addr: int, y_addr: int, alpha_sreg: int = 0,
 
 def matmul_program(n: int, a_addr: int, b_addr: int, c_addr: int,
                    t: int = 4, vlmax: Optional[int] = None, sew: int = 64,
-                   lmul: int = 1):
+                   lmul=1):
     """Listing 1: C <- A B + C, row-major, tiles of t rows, strip-mined.
 
     With grouping the strip covers ``lmul * vlmax`` columns per VSETVL and
     every VLD/VFMA names an LMUL-register group, so the per-column issue
     cost is amortized over LMUL× more elements. The row-tile height t is
     clamped so the B row, the broadcast group and t accumulator groups fit
-    the 32-register file: t <= 32/lmul - 2 (the register-pressure cost of
+    the 32-register file: t <= 32/span - 2 (the register-pressure cost of
     grouping — B-row reuse shrinks as LMUL grows, Ara2's trade-off).
     """
-    vlmax = (vlmax or n) * lmul
-    t = max(1, min(t, NUM_VREGS // lmul - 2))
-    vb, vbc, vc0 = 0, lmul, 2 * lmul          # B row, broadcast, C tiles
+    span = group_span(lmul)
+    vlmax = max(1, int((vlmax or n) * Fraction(lmul)))
+    t = max(1, min(t, NUM_VREGS // span - 2))
+    vb, vbc, vc0 = 0, span, 2 * span          # B row, broadcast, C tiles
     prog = []
     col = 0
     while col < n:
@@ -421,15 +619,53 @@ def matmul_program(n: int, a_addr: int, b_addr: int, c_addr: int,
         for r0 in range(0, n, t):
             rows = min(t, n - r0)
             for j in range(rows):            # phase I
-                prog.append(VLD(vc0 + j * lmul, c_addr + (r0 + j) * n + col))
+                prog.append(VLD(vc0 + j * span, c_addr + (r0 + j) * n + col))
             for i in range(n):               # phase II
                 prog.append(VLD(vb, b_addr + i * n + col))
                 for j in range(rows):
                     prog.append(LDSCALAR(1, a_addr + (r0 + j) * n + i))
                     prog.append(VINS(vbc, 1))
-                    prog.append(VFMA_VS(vc0 + j * lmul, 1, vb))
+                    prog.append(VFMA_VS(vc0 + j * span, 1, vb))
             for j in range(rows):            # phase III
-                prog.append(VST(vc0 + j * lmul, c_addr + (r0 + j) * n + col))
+                prog.append(VST(vc0 + j * span, c_addr + (r0 + j) * n + col))
+        col += vl
+    return prog
+
+
+def imatmul_program(n: int, a_addr: int, b_addr: int, c_addr: int,
+                    t: int = 4, vlmax: Optional[int] = None, lmul=1,
+                    sew: int = 8):
+    """Integer (SEW=8) Listing-1 analogue: C <- A B + C mod 2^SEW.
+
+    The op subset has no integer MACC, so every accumulation is a VMUL
+    into a temp group plus a VADD — two ALU slots where the float kernel
+    spends one FMA. The scoreboard therefore lands the int8 speedup near
+    4× of the 64-bit baseline rather than the raw 8× datapath split; the
+    honest cost of the missing vmacc (benchmarks/multiprecision.py
+    records both numbers).
+    """
+    span = group_span(lmul)
+    vlmax = max(1, int((vlmax or n) * Fraction(lmul)))
+    t = max(1, min(t, NUM_VREGS // span - 3))
+    vb, vbc, vt, vc0 = 0, span, 2 * span, 3 * span
+    prog = []
+    col = 0
+    while col < n:
+        vl = min(n - col, vlmax)
+        prog.append(VSETVL(vl, sew, lmul))
+        for r0 in range(0, n, t):
+            rows = min(t, n - r0)
+            for j in range(rows):            # phase I
+                prog.append(VLD(vc0 + j * span, c_addr + (r0 + j) * n + col))
+            for i in range(n):               # phase II
+                prog.append(VLD(vb, b_addr + i * n + col))
+                for j in range(rows):
+                    prog.append(LDSCALAR(1, a_addr + (r0 + j) * n + i))
+                    prog.append(VINS(vbc, 1))
+                    prog.append(VMUL(vt, vbc, vb))
+                    prog.append(VADD(vc0 + j * span, vc0 + j * span, vt))
+            for j in range(rows):            # phase III
+                prog.append(VST(vc0 + j * span, c_addr + (r0 + j) * n + col))
         col += vl
     return prog
 

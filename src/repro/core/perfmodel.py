@@ -79,7 +79,7 @@ class KernelPerf:
 def matmul_cycles(cfg: AraConfig, n: int, t: int = 4,
                   issue_interval: float | None = None,
                   mem_bytes_per_cycle: float | None = None,
-                  ew_bits: int = 64, lmul: int = 1) -> float:
+                  ew_bits: int = 64, lmul=1) -> float:
     """Cycle model, multi-precision aware (§III-E4): at element width
     ``ew_bits`` the FPU retires 64/ew elements/lane/cycle, memory moves
     ew/8-byte elements, and VLMAX grows by 64/ew (fewer strip-mine trips).
@@ -93,9 +93,17 @@ def matmul_cycles(cfg: AraConfig, n: int, t: int = 4,
     also pays its real register-pressure cost: less B-row reuse. Net:
     grouping wins in the short-vector regime and over-grouping loses in
     the long-vector one — the Ara2 trade-off, and the scoreboard agrees.
+
+    ``ew_bits=8`` is the integer lane (8 sub-words/lane/cycle); the
+    formula charges the FMA rate — the closed form models the datapath
+    split, while the scoreboard's VMUL+VADD spelling (no integer MACC,
+    ``isa.imatmul_program``) honestly halves it. Fractional ``lmul``
+    (mf2/mf4, exact Fractions) shrinks VLMAX — more strips, never fewer
+    cycles: fractional grouping exists for mixed-width EMUL legality,
+    not speed, and the golden table pins that honesty too.
     """
-    from repro.core.isa import NUM_VREGS
-    t = max(1, min(t, NUM_VREGS // lmul - 2))
+    from repro.core.isa import NUM_VREGS, group_span
+    t = max(1, min(t, NUM_VREGS // group_span(lmul) - 2))
     lanes = cfg.lanes
     ways = 64 // ew_bits                     # datapath subdivision
     ebytes = ew_bits / 8.0
@@ -129,7 +137,7 @@ def matmul_cycles(cfg: AraConfig, n: int, t: int = 4,
     return cycles
 
 
-def matmul_perf(cfg: AraConfig, n: int, ew_bits: int = 64, lmul: int = 1,
+def matmul_perf(cfg: AraConfig, n: int, ew_bits: int = 64, lmul=1,
                 **kw) -> KernelPerf:
     return KernelPerf("matmul",
                       matmul_cycles(cfg, n, ew_bits=ew_bits, lmul=lmul, **kw),
@@ -161,7 +169,7 @@ def matmul_roofline(cfg: AraConfig, n: int, ew_bits: int = 64) -> float:
 
 
 def daxpy_cycles(cfg: AraConfig, n: int, ew_bits: int = 64,
-                 lmul: int = 1) -> float:
+                 lmul=1) -> float:
     # memory-bound: 3 * ew/8 * n bytes over 4*lanes B/cycle (= 6n/lanes at
     # ew=64), plus the paper's measured 24-cycle config overhead (§V-B).
     # Each strip-mine trip beyond the first serializes on its vsetvl
@@ -176,7 +184,7 @@ def daxpy_cycles(cfg: AraConfig, n: int, ew_bits: int = 64,
 
 
 def daxpy_perf(cfg: AraConfig, n: int, ew_bits: int = 64,
-               lmul: int = 1) -> KernelPerf:
+               lmul=1) -> KernelPerf:
     return KernelPerf("daxpy", daxpy_cycles(cfg, n, ew_bits, lmul), 2.0 * n,
                       cfg.lanes, ew_bits, lmul)
 

@@ -27,8 +27,9 @@ PEAKS_FLOPS = {
 # benchmarks' predicted speedups all consult this table.
 ARA_FLOP_PER_CYCLE_PER_LANE = {64: 2, 32: 4, 16: 8, 8: 16}
 
-# SEW (bits) <-> numpy/jax float dtype name used by the vector engines.
-SEW_TO_DTYPE = {64: "float64", 32: "float32", 16: "float16"}
+# SEW (bits) <-> numpy/jax dtype name used by the vector engines. SEW=8
+# is the integer lane (no FP8 format): int8 two's complement.
+SEW_TO_DTYPE = {64: "float64", 32: "float32", 16: "float16", 8: "int8"}
 DTYPE_TO_SEW = {"float64": 64, "float32": 32, "float16": 16,
                 "bfloat16": 16, "int8": 8}
 

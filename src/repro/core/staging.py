@@ -52,9 +52,12 @@ NF_MAX = max(isa.LMULS)          # nf * lmul <= 8 caps fields at 8
 
 # Opcode table: VGATHER and VLUXEI share semantics (and a branch); VSETVL
 # has no row (the pre-pass folds it into every row's vl/vpr/lmul/sew).
+# The integer/fixed-point class (vadd..vsmul) executes on an int32 view
+# of the registers; the saturating four carry the sticky vxsat flag.
 OPS = ("nop", "vld", "vlds", "vgather", "vlseg", "vst", "vsseg", "vsuxei",
        "vfma", "vfma_vs", "vfadd", "vfmul", "vfwmul", "vfwma", "vfncvt",
-       "vadd", "vins", "vext", "vslide", "ldscalar")
+       "vadd", "vins", "vext", "vslide", "ldscalar",
+       "vsub", "vmul", "vsaddu", "vsadd", "vssub", "vsmul")
 OP_ID = {name: i for i, name in enumerate(OPS)}
 
 # Instruction-table columns (all int32):
@@ -64,7 +67,8 @@ OP_ID = {name: i for i, name in enumerate(OPS)}
 #   sd    scalar register id         imm  element address
 #   aux   stride / slide amount / extract index / nf
 #   vl    resolved vector length     vpr  per-register capacity at sew
-#   lmul  group multiplier           sewi/wsewi  SEWS index of sew / 2*sew
+#   lmul  registers per group (group_span: 1 for fractional LMUL)
+#   sewi/wsewi  SEWS index of sew / 2*sew
 FIELDS = ("op", "rd", "ra", "rb", "sd", "imm", "aux",
           "vl", "vpr", "lmul", "sewi", "wsewi")
 
@@ -78,7 +82,9 @@ _OP_FOR = {
     isa.VSSEG: "vsseg", isa.VSUXEI: "vsuxei", isa.VFMA: "vfma",
     isa.VFMA_VS: "vfma_vs", isa.VFADD: "vfadd", isa.VFMUL: "vfmul",
     isa.VFWMUL: "vfwmul", isa.VFWMA: "vfwma", isa.VFNCVT: "vfncvt",
-    isa.VADD: "vadd", isa.VINS: "vins", isa.VEXT: "vext",
+    isa.VADD: "vadd", isa.VSUB: "vsub", isa.VMUL: "vmul",
+    isa.VSADDU: "vsaddu", isa.VSADD: "vsadd", isa.VSSUB: "vssub",
+    isa.VSMUL: "vsmul", isa.VINS: "vins", isa.VEXT: "vext",
     isa.VSLIDE: "vslide", isa.LDSCALAR: "ldscalar",
 }
 
@@ -115,7 +121,7 @@ def resolve_vtype(program, vlmax64: int):
         isa.check_insn(ins, sew, lmul)
         if type(ins) is isa.VSETVL:
             sew, lmul = ins.sew, ins.lmul
-            vl = min(ins.vl, vlmax64 * (64 // sew) * lmul)
+            vl = min(ins.vl, isa.grouped_vlmax(vlmax64, sew, lmul))
         out.append((ins, vl, sew, lmul))
     return out
 
@@ -132,7 +138,7 @@ def encode_program(program, vlmax64: int):
             raise ValueError(ins)
         r = dict.fromkeys(FIELDS, 0)
         r.update(op=OP_ID[name], vl=vl, vpr=vlmax64 * (64 // sew),
-                 lmul=lmul, sewi=isa.SEWS.index(sew),
+                 lmul=isa.group_span(lmul), sewi=isa.SEWS.index(sew),
                  wsewi=isa.SEWS.index(2 * sew) if 2 * sew in isa.SEWS else 0)
         if t in (isa.VLD, isa.VLDS, isa.VGATHER, isa.VLUXEI, isa.VLSEG):
             r["rd"], r["imm"] = ins.vd, ins.addr
@@ -148,7 +154,8 @@ def encode_program(program, vlmax64: int):
                 r["aux"] = ins.nf
             elif t is isa.VSUXEI:
                 r["ra"] = ins.vidx
-        elif t in (isa.VFMA, isa.VFADD, isa.VFMUL, isa.VADD,
+        elif t in (isa.VFMA, isa.VFADD, isa.VFMUL, isa.VADD, isa.VSUB,
+                   isa.VMUL, isa.VSADDU, isa.VSADD, isa.VSSUB, isa.VSMUL,
                    isa.VFWMUL, isa.VFWMA):
             r["rd"], r["ra"], r["rb"] = ins.vd, ins.va, ins.vb
         elif t is isa.VFMA_VS:
@@ -256,6 +263,96 @@ TRACE_CACHE = TraceCache()
 
 
 # ---------------------------------------------------------------------------
+# integer / fixed-point arithmetic (int32 view of the registers)
+# ---------------------------------------------------------------------------
+
+
+def _u32(x):
+    return jax.lax.bitcast_convert_type(x, jnp.uint32)
+
+
+def _i32(x):
+    return jax.lax.bitcast_convert_type(x, jnp.int32)
+
+
+def wrap_int(x, bits: int):
+    """int32 -> signed two's-complement ``bits``-wide value (sign-extend)."""
+    if bits >= 32:
+        return x
+    sh = 32 - bits
+    return (x << sh) >> sh                   # jnp shifts: arithmetic right
+
+
+def int_arith(kind: str, a, b, bits: int):
+    """One integer/fixed-point op on int32 canonical values.
+
+    ``bits`` is static (the lax.switch over sewi specializes it); returns
+    ``(result int32, saturated bool)``. vadd/vsub/vmul wrap mod 2^bits;
+    the saturating four clamp and flag. vxrm is fixed at rnu: VSMUL adds
+    2^(bits-2) before the arithmetic (bits-1)-shift — ties round up.
+    SEW=32 needs care in a 32-bit trace: overflow is detected by sign
+    algebra for add/sub, the unsigned view for vsaddu, and VSMUL's 64-bit
+    product is rebuilt from 16-bit partial products in uint32.
+    """
+    s = min(bits, 32)                        # the SEW=64 branch never runs
+    lo, hi = -(1 << (s - 1)), (1 << (s - 1)) - 1
+    no_sat = jnp.zeros(a.shape, bool)
+    if kind == "vadd":
+        return wrap_int(a + b, s), no_sat
+    if kind == "vsub":
+        return wrap_int(a - b, s), no_sat
+    if kind == "vmul":
+        return wrap_int(a * b, s), no_sat
+    if s < 32:                               # everything fits one int32
+        if kind == "vsaddu":
+            um = (1 << s) - 1
+            r0 = (a & um) + (b & um)
+            return wrap_int(jnp.minimum(r0, um), s), r0 > um
+        if kind == "vsadd":
+            r0 = a + b
+        elif kind == "vssub":
+            r0 = a - b
+        else:                                # vsmul, rnu rounding
+            r0 = (a * b + (1 << (s - 2))) >> (s - 1)
+        r = jnp.clip(r0, lo, hi)
+        return r, r != r0
+    if kind == "vsadd":
+        r0 = a + b
+        ovf = ((a ^ r0) & (b ^ r0)) < 0
+        return jnp.where(ovf, jnp.where(a < 0, lo, hi), r0), ovf
+    if kind == "vssub":
+        r0 = a - b
+        ovf = ((a ^ b) & (a ^ r0)) < 0
+        return jnp.where(ovf, jnp.where(a < 0, lo, hi), r0), ovf
+    if kind == "vsaddu":
+        ua, ub = _u32(a), _u32(b)
+        r0 = ua + ub
+        sat = r0 < ua
+        return _i32(jnp.where(sat, jnp.uint32(0xFFFFFFFF), r0)), sat
+    # vsmul at SEW=32: signed 64-bit product via 16x16 partial products
+    ua, ub = _u32(a), _u32(b)
+    al, ah = ua & 0xFFFF, ua >> 16
+    bl, bh = ub & 0xFFFF, ub >> 16
+    t1 = ah * bl + ((al * bl) >> 16)
+    t2 = al * bh + (t1 & 0xFFFF)
+    uhigh = ah * bh + (t1 >> 16) + (t2 >> 16)
+    high = _i32(uhigh) - jnp.where(a < 0, b, 0) - jnp.where(b < 0, a, 0)
+    ulow = ua * ub
+    low2 = ulow + jnp.uint32(1 << 30)        # + rnu half (2^(s-2))
+    high2 = high + (low2 < ulow).astype(jnp.int32)
+    r0 = (high2 << 1) | _i32(low2 >> 31)     # (prod + 2^30) >> 31
+    minmin = (a == lo) & (b == lo)           # the only overflowing input
+    return jnp.where(minmin, hi, r0), minmin
+
+
+# opcode -> (kind, sets-vxsat) for the integer branch
+INT_OPS = {"vadd": ("vadd", False), "vsub": ("vsub", False),
+           "vmul": ("vmul", False), "vsaddu": ("vsaddu", True),
+           "vsadd": ("vsadd", True), "vssub": ("vssub", True),
+           "vsmul": ("vsmul", True)}
+
+
+# ---------------------------------------------------------------------------
 # the staged interpreter: scan over rows, switch over opcodes
 # ---------------------------------------------------------------------------
 
@@ -283,9 +380,29 @@ def build_runner(sig: Signature, stats: CacheStats, mesh=None,
     window = gwin // lanes                 # flat group window per lane
     storage = jnp.dtype(sig.storage)
     nregs = isa.NUM_VREGS
+    int_storage = jnp.issubdtype(storage, jnp.integer)
+    # largest int32 the storage represents exactly: f32's 24-bit mantissa
+    # caps it below INT32_MAX, so float->int casts clip there and stay
+    # deterministic across backends (NaN pins to 0 for the same reason)
+    i32max = (2 ** 31 - 1) if (int_storage or storage.itemsize >= 8) \
+        else 2 ** 31 - 128
+
+    def to_int(x):
+        """Storage value -> int32 two's-complement canonical form."""
+        if int_storage:
+            return x
+        x = jnp.where(jnp.isnan(x), jnp.zeros_like(x), x)
+        return jnp.clip(x, -(2.0 ** 31), float(i32max)).astype(jnp.int32)
 
     def _q(x, bits):
-        # HW-width rounding; identity when the format is >= storage width
+        # HW-width rounding. Float storage: round to the SEW float format
+        # (identity when >= storage width), except SEW=8 — the integer
+        # lane — which truncates-and-wraps to int8. Integer storage makes
+        # the engine an exact fixed-point machine: every width wraps.
+        if int_storage:
+            return wrap_int(x, min(bits, 32))
+        if bits == 8:
+            return wrap_int(to_int(x), 8).astype(storage)
         dt = _SEW_DTYPE[bits]
         if dt.itemsize >= storage.itemsize:
             return x
@@ -417,6 +534,26 @@ def build_runner(sig: Signature, stats: CacheStats, mesh=None,
                 return (W(v, row["rd"], qdyn(R(v, row["ra"]),
                                              row["sewi"])), mem, s)
 
+            def int_op(kind, sticky):
+                # integer/fixed-point branch: int32 view in, wrapped or
+                # saturated result out; vxsat is part of the carried scan
+                # state (the scalar file), so the cached-trace contract
+                # is untouched — saturation is data, not structure
+                def op(v, mem, s):
+                    a = to_int(R(v, row["ra"]))
+                    b = to_int(R(v, row["rb"]))
+                    res, sat = jax.lax.switch(
+                        row["sewi"],
+                        [lambda x, y, w=w: int_arith(kind, x, y, w)
+                         for w in isa.SEWS], a, b)
+                    v = W(v, row["rd"], res.astype(storage))
+                    if sticky:
+                        flag = allmax(jnp.max(
+                            jnp.where(mask & sat, 1, 0)))
+                        s = s.at[isa.VXSAT_SREG].max(flag.astype(storage))
+                    return v, mem, s
+                return op
+
             def op_vins(v, mem, s):
                 vals = jnp.broadcast_to(s[row["sd"]], (window,))
                 return W(v, row["rd"], qdyn(vals, row["sewi"])), mem, s
@@ -439,11 +576,15 @@ def build_runner(sig: Signature, stats: CacheStats, mesh=None,
             def op_ldscalar(v, mem, s):
                 return v, mem, s.at[row["sd"]].set(mem[row["imm"]])
 
+            named = {k: int_op(*v) for k, v in INT_OPS.items()}
             branches = [op_nop, op_vld, op_vlds, op_vgather, op_vlseg,
                         op_vst, op_vsseg, op_vsuxei, op_vfma, op_vfma_vs,
                         op_vfadd, op_vfmul, op_vfwmul, op_vfwma,
-                        op_vfncvt, op_vfadd, op_vins, op_vext, op_vslide,
-                        op_ldscalar]
+                        op_vfncvt, named["vadd"], op_vins, op_vext,
+                        op_vslide, op_ldscalar, named["vsub"],
+                        named["vmul"], named["vsaddu"], named["vsadd"],
+                        named["vssub"], named["vsmul"]]
+            assert len(branches) == len(OPS)
             return jax.lax.switch(row["op"], branches, v, mem, s), None
 
         v0 = jnp.zeros((nregs, slots), storage)

@@ -20,19 +20,22 @@ lets one binary run on any lane count. Our analogues:
 from __future__ import annotations
 
 import functools
+from fractions import Fraction
 
 import jax
 import jax.numpy as jnp
 
 
-def strip_lengths(n: int, vlmax: int, lmul: int = 1):
+def strip_lengths(n: int, vlmax: int, lmul=1):
     """Fig. 9 line 3 with grouping: the vl of each strip-mine trip.
 
     ``vlmax`` is the per-register VLMAX at the current SEW; an LMUL-
     register group covers ``lmul * vlmax`` elements per trip, so the list
     shrinks by up to LMUL× — fewer vsetvl/dispatch overheads per kernel.
+    Fractional LMUL (mf2/mf4) shortens the strip instead (floored, min 1)
+    — the honest cost of sub-register groups in mixed-width loops.
     """
-    step = vlmax * lmul
+    step = max(1, int(vlmax * Fraction(lmul)))
     out = []
     c = 0
     while c < n:
@@ -41,7 +44,7 @@ def strip_lengths(n: int, vlmax: int, lmul: int = 1):
     return out
 
 
-def lmul_tile(n: int, base: int, lmul: int = 1, cap: int | None = None):
+def lmul_tile(n: int, base: int, lmul=1, cap: int | None = None):
     """Pick a block edge for an LMUL-grouped kernel: the largest divisor
     of ``n`` no bigger than ``min(base * lmul, n, cap)``.
 
@@ -49,13 +52,30 @@ def lmul_tile(n: int, base: int, lmul: int = 1, cap: int | None = None):
     == 0); the LMUL scaling is the register-grouping analogue — one grid
     step streams an LMUL× longer "vector" through the MXU/VPU, amortizing
     per-step dispatch exactly like grouped registers amortize the 5-cycle
-    issue interval.
+    issue interval. Fractional lmul narrows the block (exact floor).
     """
-    limit = min(base * lmul, n, cap if cap is not None else n)
+    limit = max(1, min(int(base * Fraction(lmul)), n,
+                       cap if cap is not None else n))
     for b in range(limit, 0, -1):
         if n % b == 0:
             return b
     return 1
+
+
+def mixed_width_lmul(lmul_wide, sew_wide: int, sew_narrow: int):
+    """EMUL the *narrow* operand of a mixed-width loop groups at.
+
+    RVV's EMUL product rule: a loop whose wide accumulator (``sew_wide``,
+    ``lmul_wide``) feeds from narrow operands keeps element counts equal
+    by grouping the narrow side at ``lmul * sew_narrow / sew_wide`` —
+    int8 operands under an int32 LMUL=1 accumulator group at mf4, which
+    is exactly why fractional LMUL exists: without it the wide operand
+    would cap the narrow operand's grouping at the same register budget.
+    Returns an int when the product is whole, else an exact Fraction
+    (``isa.format_lmul`` spells it mf2/mf4).
+    """
+    f = Fraction(lmul_wide) * Fraction(sew_narrow, sew_wide)
+    return f.numerator if f.denominator == 1 else f
 
 
 def stripmine_map(fn, xs, strip: int):

@@ -32,6 +32,16 @@ file (storage stays the engine dtype — value semantics, HW-width rounding).
 Widening ops (VFWMUL/VFWMA) round once into the 2·SEW format, modeling
 "multiply narrow, accumulate wide" mixed-precision FMAs.
 
+SEW=8 is the integer lane (no FP8 format): the integer/fixed-point op
+class (VADD/VSUB/VMUL wrap mod 2^SEW; VSADDU/VSADD/VSSUB/VSMUL saturate
+with the sticky vxsat flag in scalar reg isa.VXSAT_SREG, vxrm fixed at
+rnu) executes on an int32 view of the registers at SEW ∈ {32, 16, 8} —
+see docs/isa.md for the normative model. Engines built with
+``dtype=jnp.int32`` are exact fixed-point machines (every width wraps,
+nothing rounds). Fractional LMUL (mf2/mf4) floors VLMAX, reserves one
+whole register per group, and resolves entirely in the host encode
+pre-pass — the staged step only ever sees the register span.
+
 Register grouping (RVV 1.0 LMUL): a vector operand names LMUL consecutive
 registers holding up to ``lmul * vlmax(sew)`` elements — element ``m`` of a
 group lives in register ``base + m // vlmax(sew)``. The staged step
@@ -105,8 +115,8 @@ class _StagedEngine:
     def vlmax(self) -> int:
         return self.vlmax64
 
-    def vlmax_for(self, sew: int, lmul: int = 1) -> int:
-        return self.vlmax64 * (64 // sew) * lmul
+    def vlmax_for(self, sew: int, lmul=1) -> int:
+        return isa.grouped_vlmax(self.vlmax64, sew, lmul)
 
     @property
     def _storage(self):
@@ -229,11 +239,17 @@ ISSUE_COST = {  # Ariane dispatch slots per instruction (Appendix A)
     isa.VSETVL: 1, isa.VLD: 2, isa.VLDS: 2, isa.VGATHER: 2, isa.VST: 2,
     isa.VLSEG: 2, isa.VSSEG: 2, isa.VLUXEI: 2, isa.VSUXEI: 2,
     isa.VFMA: 1, isa.VFMA_VS: 1, isa.VFADD: 1, isa.VFMUL: 1, isa.VADD: 1,
-    isa.VFWMUL: 1, isa.VFWMA: 1, isa.VFNCVT: 1,
+    isa.VSUB: 1, isa.VMUL: 1, isa.VSADDU: 1, isa.VSADD: 1, isa.VSSUB: 1,
+    isa.VSMUL: 1, isa.VFWMUL: 1, isa.VFWMA: 1, isa.VFNCVT: 1,
     isa.VINS: 1, isa.VEXT: 1, isa.VSLIDE: 1, isa.LDSCALAR: 3,
 }
 
 _WIDENING = (isa.VFWMUL, isa.VFWMA)
+# integer/fixed-point class: the lane ALU, subdividing 64/SEW ways like
+# the FPU — 8 int8 sub-words per lane per cycle is the §III-E4 claim's
+# integer rung (and the TPU int8 394-TOPS analogue's Ara-side ruler)
+_INT_ALU = (isa.VADD, isa.VSUB, isa.VMUL, isa.VSADDU, isa.VSADD,
+            isa.VSSUB, isa.VSMUL)
 _ELEMENT_GRANULAR = (isa.VLDS, isa.VGATHER, isa.VLUXEI, isa.VSUXEI)
 _MEM_OPS = (isa.VLD, isa.VLDS, isa.VGATHER, isa.VST,
             isa.VLSEG, isa.VSSEG, isa.VLUXEI, isa.VSUXEI)
@@ -283,6 +299,10 @@ def simulate_timing(program, cfg: AraConfig,
             unit, lat = "vlsu", occ + L_MEM + C_MEM_LANE * lanes
         elif t is isa.LDSCALAR:
             unit, occ, lat = "scalar", 1.0, 2.0
+        elif t in _INT_ALU:
+            unit = "alu"
+            occ = e / ways
+            lat = occ + CHAIN_LAG
         elif t in (isa.VINS, isa.VEXT, isa.VSLIDE):
             unit, occ = "sldu", e / ways + (lanes / 8.0)
             lat = occ

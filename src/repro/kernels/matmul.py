@@ -9,6 +9,12 @@ fp32 accumulation — Ara's 2x32/4x16 subdivision of the 64-bit datapath.
 
 Block shapes default to MXU-aligned (128 multiples); K is the innermost
 (sequential) grid dim so the fp32 VMEM accumulator carries across K steps.
+
+``matmul_int8`` is the SEW=8 rung: int8 × int8 inputs accumulate in an
+int32 VMEM scratch (``preferred_element_type=jnp.int32`` — the TPU int8
+394-TOPS path, Ara's 8×/lane datapath split) and optionally requantize
+back to int8 with the same round-to-nearest-up rule the ISA's VSMUL
+uses (add half, arithmetic shift, saturate).
 """
 from __future__ import annotations
 
@@ -75,5 +81,68 @@ def matmul(a, b, *, bm: int = 128, bn: int = 128, bk: int = 128,
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(a, b)
+
+
+def _matmul_int8_kernel(a_ref, b_ref, o_ref, acc_ref, *, n_k: int,
+                        shift: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(a_ref[...], b_ref[...],
+                            preferred_element_type=jnp.int32)
+
+    @pl.when(k == n_k - 1)
+    def _done():
+        acc = acc_ref[...]
+        if shift:
+            # rnu requantization, the VSMUL rounding rule: add half, floor
+            acc = (acc + (1 << (shift - 1))) >> shift
+        if jnp.dtype(o_ref.dtype) == jnp.int8:
+            acc = jnp.clip(acc, -128, 127)   # saturate, not wrap
+        o_ref[...] = acc.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret",
+                                             "out_dtype", "shift", "lmul"))
+def matmul_int8(a, b, *, bm: int = 128, bn: int = 128, bk: int = 128,
+                interpret: bool = False, out_dtype=jnp.int32,
+                shift: int = 0, lmul=1):
+    """int8 a (M,K) @ int8 b (K,N), exact int32 accumulation.
+
+    The SEW=8 analogue of the multi-precision path: narrow operands,
+    wide accumulator — Ara's VMUL/VADD int8 loop with an int32 C tile,
+    or the MXU's int8 mode (v5e: 394 TOPS, 2× bf16). ``out_dtype=int8``
+    requantizes the accumulator with ``shift`` (round-to-nearest-up then
+    saturate — identical rounding to the ISA's VSMUL); ``out_dtype=
+    int32`` (default) returns the exact products. ``lmul`` widens the N
+    block as in :func:`matmul` — and because the accumulator is 4× the
+    operand width this is exactly the mixed-width loop fractional LMUL
+    exists for on the Ara side (``stripmine.mixed_width_lmul``).
+    """
+    assert a.dtype == jnp.int8 and b.dtype == jnp.int8, (a.dtype, b.dtype)
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, (a.shape, b.shape)
+    bm, bk = min(bm, m), min(bk, k)
+    assert n % min(bn, n) == 0, (n, bn)
+    bn = lmul_tile(n, bn, lmul)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (m, n, k, bm, bn, bk)
+    n_k = k // bk
+    grid = (m // bm, n // bn, n_k)
+    return pl.pallas_call(
+        functools.partial(_matmul_int8_kernel, n_k=n_k, shift=shift),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
         interpret=interpret,
     )(a, b)

@@ -23,6 +23,7 @@ from repro.kernels.attention import flash_attention as _flash
 from repro.kernels.axpy import axpy as _axpy
 from repro.kernels.conv import conv2d_direct as _conv
 from repro.kernels.matmul import matmul as _matmul
+from repro.kernels.matmul import matmul_int8 as _matmul_int8
 from repro.kernels.ssm_scan import ssm_scan as _ssm
 
 
@@ -43,6 +44,16 @@ def matmul(a, b, *, policy: Policy | None = None, **kw):
         kw.setdefault("lmul", policy.lmul)
     a, b = _cast(policy, a, b)
     return _matmul(a, b, **kw)
+
+
+def matmul_int8(a, b, *, policy: Policy | None = None, **kw):
+    """SEW=8 route: int8 inputs, int32 accumulation, optional int8
+    requantize (``out_dtype=jnp.int8, shift=``). No dtype cast here —
+    int8 operands are the caller's quantization decision."""
+    kw.setdefault("interpret", _default_interpret())
+    if policy is not None:
+        kw.setdefault("lmul", policy.lmul)
+    return _matmul_int8(a, b, **kw)
 
 
 def axpy(alpha, x, y, *, policy: Policy | None = None, **kw):

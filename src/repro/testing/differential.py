@@ -40,30 +40,103 @@ from __future__ import annotations
 
 import json
 import os
+from fractions import Fraction
 from typing import Callable, Iterable, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.core import isa
 
-SEW_NP = {64: np.float64, 32: np.float32, 16: np.float16}
+# SEW -> the rounding format: float formats for the FPU widths, int8
+# two's complement for the integer lane (no FP8 format exists)
+SEW_NP = {64: np.float64, 32: np.float32, 16: np.float16, 8: np.int8}
 
-# storage is f32 for the in-process pair; f16 rounding dominates its tol
-TOL = {64: 1e-5, 32: 1e-5, 16: 1e-2}
+# storage is f32 for the in-process pair; f16 rounding dominates its tol;
+# SEW=8 cells are pure-integer and exact in any storage
+TOL = {64: 1e-5, 32: 1e-5, 16: 1e-2, 8: 1e-6}
 
-MEM_WORDS = 2048      # oracle/program memory size (elements)
+# oracle/program memory size (elements): 8x the grid's largest VLMAX
+# (SEW=8 x LMUL=8 at VLMAX64=8 -> 512), and CONSTANT across cells so
+# every cell of a sweep pads to the same mem_words — one signature, one
+# XLA compile per engine for the whole grid
+MEM_WORDS = 4096
 INT_REGION = 256      # mem[:INT_REGION] holds small ints (index material)
 VLMAX64 = 8           # default per-register 64-bit VLMAX for the grid
 
-DEFAULT_OPS = ("vfma", "vfma_vs", "vfadd", "vfmul", "vadd", "vins", "vld",
-               "vlds", "vgather", "vluxei", "vst", "vsuxei", "vlseg",
-               "vsseg", "vslide", "vext", "ldscalar", "vfwmul", "vfwma",
-               "vfncvt")
+FP_POOL = ("vfma", "vfma_vs", "vfadd", "vfmul", "vfwmul", "vfwma",
+           "vfncvt")
+INT_POOL = ("vadd", "vsub", "vmul", "vsaddu", "vsadd", "vssub", "vsmul")
+
+DEFAULT_OPS = FP_POOL + INT_POOL + (
+    "vins", "vld", "vlds", "vgather", "vluxei", "vst", "vsuxei", "vlseg",
+    "vsseg", "vslide", "vext", "ldscalar")
 
 
 # ---------------------------------------------------------------------------
 # numpy oracle
 # ---------------------------------------------------------------------------
+
+
+def _wrap_np(x, bits: int):
+    """int -> signed two's-complement ``bits``-wide value, int64 math."""
+    m = 1 << bits
+    r = np.asarray(x).astype(np.int64) & (m - 1)
+    return r - ((r & (m >> 1)) << 1)
+
+
+def to_int_np(x, storage=np.float32):
+    """Mirror of the engines' storage-float -> int32 canonicalization:
+    NaN pins to 0, values clip to the largest storage-representable
+    int32, then truncate toward zero. Int storage passes through."""
+    if np.issubdtype(np.dtype(storage), np.integer):
+        return np.asarray(x).astype(np.int64)
+    hi = (2 ** 31 - 1) if np.dtype(storage).itemsize >= 8 else 2 ** 31 - 128
+    a = np.asarray(x, np.float64)
+    a = np.where(np.isnan(a), 0.0, a)
+    return np.clip(a, -(2.0 ** 31), hi).astype(np.int64)
+
+
+def quantize(x, bits: int, storage=np.float32):
+    """The per-SEW register rounding rule, shared with targeted tests:
+    float formats for SEW >= 16, int8 truncate-and-wrap for SEW=8, and
+    pure integer wrap at every width when ``storage`` is an int dtype
+    (the exact fixed-point machine the int8 property tests drive)."""
+    if np.issubdtype(np.dtype(storage), np.integer):
+        return _wrap_np(x, min(bits, 32)).astype(storage)
+    if bits == 8:
+        return _wrap_np(to_int_np(x, storage), 8).astype(storage)
+    dt = np.dtype(SEW_NP[bits])
+    if dt.itemsize >= np.dtype(storage).itemsize:
+        return np.asarray(x, storage)
+    return np.asarray(x).astype(dt).astype(storage)
+
+
+def _int_bin_np(kind: str, a, b, sew: int):
+    """Fixed-point/int op on int64 canonical values — an independent
+    spelling of staging.int_arith (int64 throughout, no 32-bit tricks);
+    returns (result int64, saturated bool)."""
+    lo, hi = -(1 << (sew - 1)), (1 << (sew - 1)) - 1
+    if kind in ("vadd", "vsub", "vmul"):
+        r = {"vadd": a + b, "vsub": a - b, "vmul": a * b}[kind]
+        return _wrap_np(r, sew), np.zeros(np.shape(a), bool)
+    if kind == "vsaddu":
+        m = (1 << sew) - 1
+        r0 = (a & m) + (b & m)
+        return _wrap_np(np.minimum(r0, m), sew), r0 > m
+    if kind == "vsadd":
+        r0 = a + b
+    elif kind == "vssub":
+        r0 = a - b
+    else:                                    # vsmul, vxrm = rnu
+        r0 = (a * b + (1 << (sew - 2))) >> (sew - 1)
+    r = np.clip(r0, lo, hi)
+    return r, r != r0
+
+
+_INT_INSNS = {isa.VADD: "vadd", isa.VSUB: "vsub", isa.VMUL: "vmul",
+              isa.VSADDU: "vsaddu", isa.VSADD: "vsadd",
+              isa.VSSUB: "vssub", isa.VSMUL: "vsmul"}
+_STICKY = ("vsaddu", "vsadd", "vssub", "vsmul")
 
 
 def numpy_oracle(program, memory, vlmax64: int, sregs: Optional[dict] = None,
@@ -73,30 +146,29 @@ def numpy_oracle(program, memory, vlmax64: int, sregs: Optional[dict] = None,
     n_elems = vlmax64 * (64 // min(isa.SEWS))
     v = np.zeros((isa.NUM_VREGS, n_elems), storage)
     s = dict(sregs or {})
+    s.setdefault(isa.VXSAT_SREG, 0.0)        # the sticky vxsat shadow
     vl, sew, lmul = vlmax64, 64, 1
 
     def q(x, bits):
-        dt = np.dtype(SEW_NP[bits])
-        if dt.itemsize >= np.dtype(storage).itemsize:
-            return np.asarray(x, storage)
-        return np.asarray(x).astype(dt).astype(storage)
+        return quantize(x, bits, storage)
 
     for ins in program:
         t = type(ins)
         isa.check_insn(ins, sew, lmul)
         vpr = vlmax64 * (64 // sew)          # per-register capacity
+        span = isa.group_span(lmul)
 
         def R(reg):
             if vl <= vpr:
                 return v[reg, :vl]
             return np.concatenate(
-                [v[reg + g, :vpr] for g in range(lmul)])[:vl]
+                [v[reg + g, :vpr] for g in range(span)])[:vl]
 
         def W(reg, vals):
             if vl <= vpr:
                 v[reg, :vl] = vals
                 return
-            for g in range(lmul):
+            for g in range(span):
                 lo = g * vpr
                 if lo >= vl:
                     break
@@ -105,7 +177,7 @@ def numpy_oracle(program, memory, vlmax64: int, sregs: Optional[dict] = None,
 
         if t is isa.VSETVL:
             sew, lmul = ins.sew, ins.lmul
-            vl = min(ins.vl, vlmax64 * (64 // sew) * lmul)
+            vl = min(ins.vl, isa.grouped_vlmax(vlmax64, sew, lmul))
         elif t is isa.VLD:
             W(ins.vd, q(mem[ins.addr:ins.addr + vl], sew))
         elif t is isa.VLDS:
@@ -118,13 +190,13 @@ def numpy_oracle(program, memory, vlmax64: int, sregs: Optional[dict] = None,
         elif t is isa.VLSEG:
             base = ins.addr + ins.nf * np.arange(vl)
             for f in range(ins.nf):
-                W(ins.vd + f * lmul, q(mem[base + f], sew))
+                W(ins.vd + f * span, q(mem[base + f], sew))
         elif t is isa.VST:
             mem[ins.addr:ins.addr + vl] = R(ins.vs)
         elif t is isa.VSSEG:
             base = ins.addr + ins.nf * np.arange(vl)
             for f in range(ins.nf):
-                mem[base + f] = R(ins.vs + f * lmul)
+                mem[base + f] = R(ins.vs + f * span)
         elif t is isa.VSUXEI:
             idx = ins.addr + R(ins.vidx).astype(np.int32)
             idx = np.clip(idx, 0, mem.shape[0] - 1)
@@ -146,8 +218,13 @@ def numpy_oracle(program, memory, vlmax64: int, sregs: Optional[dict] = None,
             W(ins.vd, q(R(ins.va) * R(ins.vb) + R(ins.vd), 2 * sew))
         elif t is isa.VFNCVT:
             W(ins.vd, q(R(ins.vs), sew))
-        elif t is isa.VADD:
-            W(ins.vd, q(R(ins.va) + R(ins.vb), sew))
+        elif t in _INT_INSNS:
+            kind = _INT_INSNS[t]
+            r, sat = _int_bin_np(kind, to_int_np(R(ins.va), storage),
+                                 to_int_np(R(ins.vb), storage), sew)
+            W(ins.vd, np.asarray(r).astype(storage))
+            if kind in _STICKY and bool(np.any(sat)):
+                s[isa.VXSAT_SREG] = max(float(s[isa.VXSAT_SREG]), 1.0)
         elif t is isa.VINS:
             W(ins.vd, q(np.full(vl, s[ins.scalar], storage), sew))
         elif t is isa.VEXT:
@@ -169,34 +246,44 @@ def numpy_oracle(program, memory, vlmax64: int, sregs: Optional[dict] = None,
 # ---------------------------------------------------------------------------
 
 
-def random_program(r: np.random.RandomState, sew: int = 64, lmul: int = 1,
+def random_program(r: np.random.RandomState, sew: int = 64, lmul=1,
                    n_ops: int = 14, vlmax64: int = VLMAX64,
                    ops: Sequence[str] = DEFAULT_OPS,
                    mem_words: Optional[int] = None):
     """Build (program, memory, sregs) legal at the given vtype.
 
-    Register allocation is LMUL-aligned: work groups are the aligned bases
-    except the last, which holds the index vector for gathers/scatters.
-    Widening picks a 2*LMUL-aligned destination whose reserved span avoids
-    both sources; segment ops bound their field span by the register file.
+    Register allocation is span-aligned: work groups are the aligned
+    bases except the last, which holds the index vector for gathers/
+    scatters (fractional LMUL has span 1, so every register is a base).
+    Widening picks an EMUL-span-aligned destination whose reserved span
+    avoids both sources; segment ops bound their field span by the file.
+    The op pool respects the vtype's op classes: float ops drop out at
+    SEW=8 (no FP8) and the integer/fixed-point class drops out at SEW=64,
+    so SEW=8 cells are pure-integer — every register value is an exact
+    small int and the differential contract is bitwise there. SEW=8
+    memory is filled with ints for the same reason.
     """
     isa.check_vtype(sew, lmul)
-    vlmax = vlmax64 * (64 // sew) * lmul
+    vlmax = isa.grouped_vlmax(vlmax64, sew, lmul)
+    span = isa.group_span(lmul)
+    wspan = isa.group_span(2 * Fraction(lmul))
     # bias toward multi-register vl so grouping is actually exercised
     vl = int(r.randint(max(2, vlmax // 2), vlmax + 1))
     # memory scales with the grid point: room for nf<=4 segment fields
     # plus slack, whatever vlmax64 the caller picked
     mem_words = max(mem_words or MEM_WORDS, 8 * vlmax)
     int_region = min(INT_REGION, mem_words // 4)
-    mem = r.uniform(-1, 1, mem_words)
+    if sew == 8:
+        mem = r.randint(-100, 100, mem_words).astype(float)
+    else:
+        mem = r.uniform(-1, 1, mem_words)
     mem[:int_region] = r.randint(0, 8, int_region)
     sregs = {0: float(np.float32(r.uniform(-2, 2)))}
 
-    bases = list(range(0, isa.NUM_VREGS, lmul))
+    bases = list(range(0, isa.NUM_VREGS, span))
     idx_grp = bases[-1]                       # gather/scatter index vector
     work = bases[:-1][:8]
-    wide_bases = [b for b in range(0, isa.NUM_VREGS - 2 * lmul + 1,
-                                   2 * lmul)]
+    wide_bases = [b for b in range(0, isa.NUM_VREGS - wspan + 1, wspan)]
 
     def reg():
         return work[r.randint(len(work))]
@@ -205,7 +292,7 @@ def random_program(r: np.random.RandomState, sew: int = 64, lmul: int = 1,
         """(wide dest, two sources outside its reserved span)."""
         for _ in range(32):
             d = wide_bases[r.randint(len(wide_bases))]
-            free = [b for b in work if b + lmul <= d or b >= d + 2 * lmul]
+            free = [b for b in work if b + span <= d or b >= d + wspan]
             if len(free) >= 1:
                 return d, free[r.randint(len(free))], \
                     free[r.randint(len(free))]
@@ -216,12 +303,19 @@ def random_program(r: np.random.RandomState, sew: int = 64, lmul: int = 1,
         prog.append(isa.VLD(vr, int(r.randint(int_region,
                                               mem_words - vl))))
     pool = [op for op in ops]
-    if sew == max(isa.SEWS) or 2 * lmul > max(isa.LMULS):
+    if sew not in isa.FP_SEWS:                # SEW=8: integer lane only
+        pool = [op for op in pool if op not in FP_POOL]
+    if sew not in isa.INT_SEWS:               # SEW=64: no int64 model
+        pool = [op for op in pool if op not in INT_POOL]
+    if sew == max(isa.SEWS) or 2 * Fraction(lmul) > max(isa.LMULS):
         pool = [op for op in pool
                 if op not in ("vfwmul", "vfwma", "vfncvt")]
-    if 2 * lmul > max(isa.LMULS):             # no room for nf >= 2 fields
+    if 2 * Fraction(lmul) > max(isa.LMULS):   # no room for nf >= 2 fields
         pool = [op for op in pool if op not in ("vlseg", "vsseg")]
 
+    int3 = {"vadd": isa.VADD, "vsub": isa.VSUB, "vmul": isa.VMUL,
+            "vsaddu": isa.VSADDU, "vsadd": isa.VSADD,
+            "vssub": isa.VSSUB, "vsmul": isa.VSMUL}
     for _ in range(n_ops):
         op = pool[r.randint(len(pool))]
         if op == "vfma":
@@ -232,8 +326,8 @@ def random_program(r: np.random.RandomState, sew: int = 64, lmul: int = 1,
             prog.append(isa.VFADD(reg(), reg(), reg()))
         elif op == "vfmul":
             prog.append(isa.VFMUL(reg(), reg(), reg()))
-        elif op == "vadd":
-            prog.append(isa.VADD(reg(), reg(), reg()))
+        elif op in int3:
+            prog.append(int3[op](reg(), reg(), reg()))
         elif op == "vins":
             prog.append(isa.VINS(reg(), 0))
         elif op == "vld":
@@ -254,8 +348,9 @@ def random_program(r: np.random.RandomState, sew: int = 64, lmul: int = 1,
             prog.append(isa.VSUXEI(reg(), int(r.randint(0, mem_words - 8)),
                                    idx_grp))
         elif op in ("vlseg", "vsseg"):
-            nf = int(r.randint(2, min(4, max(isa.LMULS) // lmul) + 1))
-            base = [b for b in work if b + nf * lmul <= idx_grp]
+            nf = int(r.randint(2, min(4, max(isa.LMULS) // Fraction(lmul))
+                               + 1))
+            base = [b for b in work if b + nf * span <= idx_grp]
             if not base:
                 continue
             vd = base[r.randint(len(base))]
@@ -279,7 +374,7 @@ def random_program(r: np.random.RandomState, sew: int = 64, lmul: int = 1,
         elif op == "vfncvt":
             src = wide_bases[r.randint(len(wide_bases))]
             dst = [b for b in work
-                   if b + lmul <= src or b >= src + 2 * lmul or b == src]
+                   if b + span <= src or b >= src + wspan or b == src]
             if not dst:
                 continue
             prog.append(isa.VFNCVT(dst[r.randint(len(dst))], src))
@@ -291,22 +386,31 @@ def random_program(r: np.random.RandomState, sew: int = 64, lmul: int = 1,
 # ---------------------------------------------------------------------------
 
 
+def vtype_combos(sews: Sequence[int] = isa.SEWS,
+                 lmuls: Sequence = isa.LMULS):
+    """The LEGAL (sew, lmul) cells of the grid: illegal vtypes — mf4 at
+    SEW ∈ {64, 32}, mf2 at SEW=64 (SEW/LMUL > ELEN) — are skipped via
+    the same ``isa.check_vtype`` every engine enforces."""
+    return [(s, l) for s in sews for l in lmuls if isa.vtype_legal(s, l)]
+
+
 def grid(n_programs: int, sews: Sequence[int] = isa.SEWS,
-         lmuls: Sequence[int] = isa.LMULS,
+         lmuls: Sequence = isa.LMULS,
          seed0: int = 0) -> Iterable[Tuple[int, int, int]]:
-    """(sew, lmul, seed) triples cycling the vtype grid, distinct seeds."""
-    combos = [(s, l) for s in sews for l in lmuls]
+    """(sew, lmul, seed) triples cycling the legal vtype grid, distinct
+    seeds."""
+    combos = vtype_combos(sews, lmuls)
     for i in range(n_programs):
         sew, lmul = combos[i % len(combos)]
         yield sew, lmul, seed0 + i
 
 
 def cells(n_per_cell: int, sews: Sequence[int] = isa.SEWS,
-          lmuls: Sequence[int] = isa.LMULS,
+          lmuls: Sequence = isa.LMULS,
           seed0: int = 0) -> Iterable[Tuple[int, int, list]]:
     """(sew, lmul, seeds) blocks — the same seed assignment ``grid``
     makes, grouped per cell so a whole cell batches through run_many."""
-    combos = [(s, l) for s in sews for l in lmuls]
+    combos = vtype_combos(sews, lmuls)
     for c, (sew, lmul) in enumerate(combos):
         yield sew, lmul, [seed0 + c + k * len(combos)
                           for k in range(n_per_cell)]
@@ -349,22 +453,25 @@ def oracle_batch(vlmax64: int = VLMAX64, storage=np.float32):
                                      storage=storage))
 
 
-def record_failure(sew: int, lmul: int, seed,
+def record_failure(sew: int, lmul, seed,
                    path: Optional[str] = None) -> Optional[str]:
     """Persist a failing grid point for CI artifact upload.
 
     ``seed`` is one int for a program-level mismatch, or the cell's seed
     list when a whole batch failed and no single program can be blamed.
+    ``lmul`` is recorded in its assembly spelling (``m2``/``mf4``) so
+    the JSON stays serializable and the repro line parses it back.
     """
     path = path or os.environ.get("DIFFERENTIAL_SEED_FILE")
     if not path:
         return None
     one = seed if isinstance(seed, int) else f"<each of {seed}>"
+    lm = isa.format_lmul(lmul)
     with open(path, "w") as f:
-        json.dump({"sew": sew, "lmul": lmul, "seed": seed,
+        json.dump({"sew": sew, "lmul": lm, "seed": seed,
                    "repro": "repro.testing.differential.random_program("
                             f"np.random.RandomState({one}), sew={sew}, "
-                            f"lmul={lmul})"}, f, indent=2)
+                            f"lmul=isa.parse_lmul('{lm}'))"}, f, indent=2)
     return path
 
 
@@ -401,7 +508,8 @@ def run_cells(batch_a: Callable, batch_b: Callable, cell_iter,
                                    seeds[0] if len(seeds) == 1 else seeds)
             note = f" (seed file: {where})" if where else ""
             raise AssertionError(
-                f"{label}: executor failed at sew={sew} lmul={lmul} "
+                f"{label}: executor failed at sew={sew} "
+                f"lmul={isa.format_lmul(lmul)} "
                 f"seeds={seeds}{note}: {e}") from e
         for i, seed in enumerate(seeds):
             try:
@@ -415,7 +523,8 @@ def run_cells(batch_a: Callable, batch_b: Callable, cell_iter,
                 where = record_failure(sew, lmul, seed)
                 note = f" (seed file: {where})" if where else ""
                 raise AssertionError(
-                    f"{label}: engines disagree at sew={sew} lmul={lmul} "
+                    f"{label}: engines disagree at sew={sew} "
+                    f"lmul={isa.format_lmul(lmul)} "
                     f"seed={seed}{note}: {e}") from e
             checked += 1
     return checked

@@ -28,14 +28,31 @@ from repro.core.vector_engine import ReferenceEngine
 from repro.testing import differential as diff
 from conftest import run_devices
 
-N_PER_CELL_ORACLE = 20           # 240 total: the acceptance-scale grid
+N_PER_CELL_ORACLE = 20           # 420 total: the acceptance-scale grid
 N_PER_CELL_LANE = 5              # full lane-pair grid, every tier-1 run
-GRID_COMBOS = len(isa.SEWS) * len(isa.LMULS)
+# the LEGAL SEW × LMUL cells: 4 sews × 4 integer lmuls, plus mf2 at
+# SEW <= 32 and mf4 at SEW <= 16 (SEW/LMUL <= ELEN) = 21 cells
+GRID_COMBOS = len(diff.vtype_combos())
+
+
+def test_grid_covers_sew8_and_fractional_lmul():
+    """The differential grid gained two rows and two columns at once:
+    every legal SEW=8 and mf2/mf4 cell is present, illegal cells are
+    skipped by the shared checker, and the count is exactly 21."""
+    combos = diff.vtype_combos()
+    assert GRID_COMBOS == 21
+    from fractions import Fraction
+    assert (8, 1) in combos and (8, 8) in combos
+    assert (8, Fraction(1, 4)) in combos and (32, Fraction(1, 2)) in combos
+    assert (64, Fraction(1, 2)) not in combos    # SEW/LMUL > ELEN
+    assert (32, Fraction(1, 4)) not in combos
+    assert all(isa.vtype_legal(s, l) for s, l in combos)
 
 
 def test_reference_vs_oracle_grid():
-    """240 random SEW × LMUL programs: jnp engine == numpy oracle, the
-    whole grid batched through one compiled signature."""
+    """420 random SEW × LMUL programs: jnp engine == numpy oracle, the
+    whole legal grid — SEW=8 integer cells and fractional-LMUL columns
+    included — batched through one compiled signature."""
     cfg = AraConfig(lanes=2)
     eng = ReferenceEngine(cfg, vlmax=diff.VLMAX64, dtype=jnp.float32)
     checked = diff.run_cells(
@@ -68,7 +85,7 @@ cfg = AraConfig(lanes=2)
 mesh = jax.sharding.Mesh(np.array(jax.devices()[:2]), ("lanes",))
 ref = ReferenceEngine(cfg, vlmax=diff.VLMAX64)
 lane = LaneEngine(cfg, mesh, vlmax=diff.VLMAX64, dtype=jnp.float64)
-tol = {{64: 1e-12, 32: 1e-12, 16: 1e-12}}
+tol = {{64: 1e-12, 32: 1e-12, 16: 1e-12, 8: 0}}
 checked = diff.run_cells(
     diff.engine_batch(ref), diff.engine_batch(lane),
     diff.cells({per_cell}), n_ops=8, tol=tol, label="lane-vs-reference")
@@ -82,26 +99,36 @@ print("LANE_DIFF_OK", checked, "compiles", stats.compiles)
 
 
 def test_generator_programs_are_legal_and_diverse():
-    """Every grid point yields validate_program-clean programs, and the
-    op pool respects the vtype: no widening at SEW=64 or LMUL=8, no
-    segment fields at LMUL=8, grouping exercised (vl spans registers)."""
-    for sew in isa.SEWS:
-        for lmul in isa.LMULS:
-            kinds = set()
-            for seed in range(6):
-                r = np.random.RandomState(seed)
-                prog, mem, sregs = diff.random_program(r, sew, lmul)
-                isa.validate_program(prog)       # would raise if illegal
-                kinds |= {type(i).__name__ for i in prog}
-                vl = prog[0].vl
-                assert vl <= diff.VLMAX64 * (64 // sew) * lmul
-                if lmul > 1:
-                    # bias guarantees multi-register groups get exercised
-                    assert vl >= diff.VLMAX64 * (64 // sew) * lmul // 2
-            if sew == 64 or lmul == 8:
-                assert not kinds & {"VFWMUL", "VFWMA", "VFNCVT"}
-            if lmul == 8:
-                assert not kinds & {"VLSEG", "VSSEG"}
+    """Every legal grid point yields validate_program-clean programs, and
+    the op pool respects the vtype: no widening at SEW=64 or LMUL=8, no
+    segment fields at LMUL=8, no float ops at SEW=8, no integer ops at
+    SEW=64, grouping exercised (vl spans registers)."""
+    fp_names = {"VFMA", "VFMA_VS", "VFADD", "VFMUL", "VFWMUL", "VFWMA",
+                "VFNCVT"}
+    int_names = {"VADD", "VSUB", "VMUL", "VSADDU", "VSADD", "VSSUB",
+                 "VSMUL"}
+    for sew, lmul in diff.vtype_combos():
+        kinds = set()
+        for seed in range(6):
+            r = np.random.RandomState(seed)
+            prog, mem, sregs = diff.random_program(r, sew, lmul)
+            isa.validate_program(prog)       # would raise if illegal
+            kinds |= {type(i).__name__ for i in prog}
+            vl = prog[0].vl
+            vlmax = isa.grouped_vlmax(diff.VLMAX64, sew, lmul)
+            assert vl <= vlmax
+            if lmul > 1:
+                # bias guarantees multi-register groups get exercised
+                assert vl >= vlmax // 2
+        if sew == 64 or lmul == 8:
+            assert not kinds & {"VFWMUL", "VFWMA", "VFNCVT"}
+        if lmul == 8:
+            assert not kinds & {"VLSEG", "VSSEG"}
+        if sew == 8:
+            assert not kinds & fp_names
+            assert kinds & int_names         # integer class exercised
+        if sew == 64:
+            assert not kinds & int_names
 
 
 def test_cells_cover_the_same_seeds_as_grid():
@@ -130,8 +157,9 @@ def test_run_pair_reports_and_records_failing_seed(tmp_path, monkeypatch):
 
     with pytest.raises(AssertionError) as e:
         diff.run_pair(good, bad, 1, sews=(32,), lmuls=(2,), seed0=7)
-    assert "sew=32 lmul=2 seed=7" in str(e.value)
+    assert "sew=32 lmul=m2 seed=7" in str(e.value)
     assert seed_file.exists()
     import json
     rec = json.loads(seed_file.read_text())
-    assert (rec["sew"], rec["lmul"], rec["seed"]) == (32, 2, 7)
+    assert (rec["sew"], rec["lmul"], rec["seed"]) == (32, "m2", 7)
+    assert isa.parse_lmul(rec["lmul"]) == 2    # the repro line parses back

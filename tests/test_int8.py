@@ -1,0 +1,457 @@
+"""SEW=8 integer datapath + fixed-point saturation + fractional LMUL.
+
+The ISSUE-5 lockdown, in four layers:
+
+- **Saturating semantics** — property tests drive VSADDU/VSADD/VSSUB/
+  VSMUL through the int32-storage ReferenceEngine (the exact fixed-point
+  machine: integer wrap at every width, no float rounding anywhere) and
+  compare against an independent numpy int64 oracle at SEW ∈ {8, 16, 32}
+  — clamp bounds at the type extremes, VSMUL's 0x80×0x80 corner and rnu
+  tie-rounding, and vxsat stickiness across whole programs.
+- **Wrap vs saturate** — VADD/VSUB/VMUL wrap mod 2^SEW and never touch
+  vxsat; the s-ops clamp and always set it.
+- **Fractional LMUL** — parse/format helpers, the SEW/LMUL <= ELEN
+  legality rule, the floored VLMAX, EMUL product rules (widening at mf2
+  reserves one register; fields at fractional LMUL are consecutive
+  registers), and the mixed-width EMUL pick (int8 under an int32
+  accumulator groups at mf4).
+- **Kernel route** — matmul_int8 (int32 accumulation, rnu int8
+  requantize) against numpy, and isa.imatmul_program end-to-end.
+
+Every test carries the ``int8`` marker (the dedicated CI lane).
+"""
+from fractions import Fraction
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.ara import AraConfig
+from repro.core import isa
+from repro.core import perfmodel as pm
+from repro.core.stripmine import lmul_tile, mixed_width_lmul, strip_lengths
+from repro.core.vector_engine import ReferenceEngine, simulate_timing
+from repro.kernels import ops
+from repro.testing import differential as diff
+
+pytestmark = pytest.mark.int8
+
+CFG = AraConfig(lanes=2)
+VLMAX64 = 8
+VL = 8
+MF2, MF4 = isa.parse_lmul("mf2"), isa.parse_lmul("mf4")
+
+
+def _int_engine(vlmax=VLMAX64):
+    """The exact fixed-point machine: int32 storage wraps every width."""
+    return ReferenceEngine(CFG, vlmax=vlmax, dtype=jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# independent fixed-point oracle (int64 numpy, written from the RVV spec)
+# ---------------------------------------------------------------------------
+
+
+def _bounds(sew):
+    return -(1 << (sew - 1)), (1 << (sew - 1)) - 1
+
+
+def fx_oracle(op, a, b, sew):
+    """(result, any_saturated) for one fixed-point/integer op."""
+    a = np.asarray(a, np.int64)
+    b = np.asarray(b, np.int64)
+    lo, hi = _bounds(sew)
+    if op in ("vadd", "vsub", "vmul"):
+        r = {"vadd": a + b, "vsub": a - b, "vmul": a * b}[op]
+        m = 1 << sew
+        r = ((r % m) + m) % m
+        return np.where(r >= m // 2, r - m, r), False
+    if op == "vsaddu":
+        m = (1 << sew) - 1
+        r0 = (a & m) + (b & m)
+        r = np.minimum(r0, m)
+        return np.where(r >= (m + 1) // 2, r - m - 1, r), bool((r0 > m).any())
+    if op == "vsadd":
+        r0 = a + b
+    elif op == "vssub":
+        r0 = a - b
+    else:                                    # vsmul: rnu then shift
+        r0 = (a * b + (1 << (sew - 2))) >> (sew - 1)
+    r = np.clip(r0, lo, hi)
+    return r, bool((r != r0).any())
+
+
+_CLS = {"vadd": isa.VADD, "vsub": isa.VSUB, "vmul": isa.VMUL,
+        "vsaddu": isa.VSADDU, "vsadd": isa.VSADD, "vssub": isa.VSSUB,
+        "vsmul": isa.VSMUL}
+_STICKY = ("vsaddu", "vsadd", "vssub", "vsmul")
+
+
+def run_binop(op, a, b, sew, engine=None):
+    """Execute one vector op through the engine; returns (out, vxsat)."""
+    eng = engine or _int_engine()
+    vl = len(a)
+    mem = np.zeros(4 * vl, np.int64)
+    mem[:vl], mem[vl:2 * vl] = a, b
+    prog = [isa.VSETVL(vl, sew), isa.VLD(1, 0), isa.VLD(2, vl),
+            _CLS[op](3, 1, 2), isa.VST(3, 2 * vl)]
+    out, s = eng.run(prog, mem)
+    return out[2 * vl:3 * vl], float(s[isa.VXSAT_SREG])
+
+
+# ---------------------------------------------------------------------------
+# saturating ops vs the oracle (extremes-biased property sweep)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=40, deadline=None)
+@given(sew=st.sampled_from([8, 16, 32]),
+       op=st.sampled_from(["vsaddu", "vsadd", "vssub", "vsmul",
+                           "vadd", "vsub", "vmul"]),
+       seed=st.integers(0, 10 ** 6), extremes=st.booleans())
+def test_int_ops_match_fixed_point_oracle(sew, op, seed, extremes):
+    """Engine == int64 oracle at every integer SEW, exactly — including
+    the type extremes, where clamping (and int32's sign-algebra overflow
+    detection) actually fires."""
+    r = np.random.RandomState(seed)
+    lo, hi = _bounds(sew)
+    if extremes:
+        pool = np.array([lo, lo + 1, -1, 0, 1, hi - 1, hi], np.int64)
+        a, b = r.choice(pool, VL), r.choice(pool, VL)
+    else:
+        a = r.randint(lo, hi + 1, VL).astype(np.int64)
+        b = r.randint(lo, hi + 1, VL).astype(np.int64)
+    got, vxsat = run_binop(op, a, b, sew)
+    want, sat = fx_oracle(op, a, b, sew)
+    np.testing.assert_array_equal(got, want, err_msg=f"{op} sew={sew}")
+    if op in _STICKY:
+        assert vxsat == float(sat), (op, sew, a, b)
+    else:
+        assert vxsat == 0.0                  # wrap ops never touch vxsat
+
+
+def test_clamp_bounds_at_type_extremes():
+    """MAX+1 / MIN-1 clamp (not wrap) at every integer SEW."""
+    for sew in isa.INT_SEWS:
+        lo, hi = _bounds(sew)
+        out, sat = run_binop("vsadd", [hi, lo, hi], [1, -1, hi], sew)
+        np.testing.assert_array_equal(out, [hi, lo, hi])
+        assert sat == 1.0
+        out, sat = run_binop("vssub", [lo, hi], [1, -1], sew)
+        np.testing.assert_array_equal(out, [lo, hi])
+        assert sat == 1.0
+        # unsigned: all-ones + 1 saturates to all-ones (canonical -1)
+        out, sat = run_binop("vsaddu", [-1], [1], sew)
+        np.testing.assert_array_equal(out, [-1])
+        assert sat == 1.0
+
+
+def test_wrap_vs_saturate_distinction():
+    """VADD wraps silently where VSADD clamps loudly — the two integer
+    sub-classes are distinct semantics, not one op with a flag."""
+    out, sat = run_binop("vadd", [127], [1], 8)
+    assert out[0] == -128 and sat == 0.0
+    out, sat = run_binop("vsadd", [127], [1], 8)
+    assert out[0] == 127 and sat == 1.0
+    out, sat = run_binop("vmul", [64], [4], 8)
+    assert out[0] == 0 and sat == 0.0        # 256 wraps to 0
+
+
+def test_vsmul_0x80_corner():
+    """(-2^(SEW-1))^2 is the one overflowing VSMUL input: result
+    saturates to MAX and vxsat sets — 0x80 × 0x80 -> 0x7F at SEW=8."""
+    for sew in isa.INT_SEWS:
+        lo, hi = _bounds(sew)
+        out, sat = run_binop("vsmul", [lo, lo], [lo, 1], sew)
+        assert out[0] == hi, (sew, out)
+        # lo * 1 = lo: (lo + 2^(sew-2)) >> (sew-1) rounds to lo/2 + ...
+        want, _ = fx_oracle("vsmul", [lo], [1], sew)
+        assert out[1] == want[0]
+        assert sat == 1.0
+
+
+def test_vsmul_rnu_rounding():
+    """vxrm = rnu: add half, floor — ties round toward +inf both signs."""
+    # 8*8 = 64 = exactly half of 128: rounds UP to 1
+    out, _ = run_binop("vsmul", [8], [8], 8)
+    assert out[0] == 1
+    # -8*8 = -64: -0.5 rounds up (toward +inf) to 0
+    out, _ = run_binop("vsmul", [-8], [8], 8)
+    assert out[0] == 0
+    # 5*51 = 255 -> 1.99 rounds to 2
+    out, _ = run_binop("vsmul", [5], [51], 8)
+    assert out[0] == 2
+
+
+def test_vxsat_sticky_across_program():
+    """One saturating element poisons the flag for the whole program —
+    later non-saturating ops (and wrap ops) never clear it."""
+    eng = _int_engine()
+    vl = 4
+    mem = np.zeros(6 * vl, np.int64)
+    mem[:vl] = [127, 1, 2, 3]
+    mem[vl:2 * vl] = [1, 1, 1, 1]
+    prog = [isa.VSETVL(vl, 8), isa.VLD(1, 0), isa.VLD(2, vl),
+            isa.VSADD(3, 1, 2),              # saturates (element 0)
+            isa.VADD(3, 3, 2), isa.VADD(3, 3, 2),
+            isa.VSADD(4, 2, 2),              # does NOT saturate
+            isa.VST(3, 2 * vl)]
+    _, s = eng.run(prog, mem)
+    assert float(s[isa.VXSAT_SREG]) == 1.0
+    # same tail without the saturating head: flag stays clear
+    prog2 = [isa.VSETVL(vl, 8), isa.VLD(1, vl), isa.VLD(2, vl),
+             isa.VSADD(3, 1, 2), isa.VADD(3, 3, 2), isa.VST(3, 2 * vl)]
+    _, s2 = eng.run(prog2, mem)
+    assert float(s2[isa.VXSAT_SREG]) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# pure-integer random programs: engine vs the differential numpy oracle
+# ---------------------------------------------------------------------------
+
+
+INT_PROGRAM_OPS = diff.INT_POOL + ("vins", "vld", "vlds", "vst", "vslide",
+                                   "vext", "ldscalar", "vgather", "vluxei",
+                                   "vsuxei")
+
+
+@settings(max_examples=12, deadline=None)
+@given(sew=st.sampled_from([8, 16, 32]), seed=st.integers(0, 9999))
+def test_random_int_programs_engine_vs_oracle(sew, seed):
+    """Random pure-integer programs agree BITWISE between the int32
+    engine and the numpy oracle in int32 storage, at every integer SEW
+    (the fixed-point differential contract; vxsat compared too, since
+    the oracle reports it under the same scalar key)."""
+    r = np.random.RandomState(seed)
+    prog, mem, sregs = diff.random_program(r, sew, 1, n_ops=10,
+                                           vlmax64=VLMAX64,
+                                           ops=INT_PROGRAM_OPS)
+    # int32 storage truncates the scalar file on entry; keep the seed
+    # scalar integer-valued so both executors read the same broadcast
+    sregs = {0: float(int(sregs[0]))}
+    eng = _int_engine()
+    got_mem, got_s = eng.run(prog, mem, sregs=dict(sregs))
+    want_mem, want_s = diff.numpy_oracle(prog, mem, VLMAX64,
+                                         sregs=dict(sregs),
+                                         storage=np.int32)
+    np.testing.assert_array_equal(got_mem, want_mem)
+    for k in set(want_s) & set(got_s):
+        assert float(got_s[k]) == float(want_s[k]), k
+
+
+# ---------------------------------------------------------------------------
+# fractional LMUL: parsing, legality, VLMAX floor, EMUL rules, execution
+# ---------------------------------------------------------------------------
+
+
+def test_parse_and_format_lmul():
+    assert isa.parse_lmul("mf2") == Fraction(1, 2)
+    assert isa.parse_lmul("mf4") == Fraction(1, 4)
+    assert isa.parse_lmul("m4") == 4 and isa.parse_lmul("2") == 2
+    assert isinstance(isa.parse_lmul("m1"), int)
+    assert isa.parse_lmul(0.25) == Fraction(1, 4)   # floats are exact
+    for lm in isa.LMULS:
+        assert isa.parse_lmul(isa.format_lmul(lm)) == lm
+        assert isa.lmul_from_exp(isa.lmul_exp(lm)) == lm
+    assert isa.format_lmul(Fraction(1, 2)) == "mf2"
+    assert isa.format_lmul(8) == "m8"
+
+
+def test_check_insn_prints_mf_spelling_not_decimals():
+    """The satellite fix: error messages say mf2/mf4, never 0.5/0.25."""
+    with pytest.raises(ValueError) as e:
+        isa.check_vtype(64, MF4)
+    assert "mf4" in str(e.value) and "0.25" not in str(e.value)
+    with pytest.raises(ValueError) as e:
+        isa.check_insn(isa.VSETVL(8, 32, MF4), 64, 1)
+    assert "mf4" in str(e.value) and "0.25" not in str(e.value)
+    with pytest.raises(ValueError) as e:     # nf*lmul rule spells mf2
+        isa.check_insn(isa.VLSEG(0, 0, nf=0), 16, MF2)
+    assert "mf2" in str(e.value) and "0.5" not in str(e.value)
+
+
+def test_fractional_vtype_legality():
+    """SEW/LMUL <= ELEN: the fractional columns exist exactly where the
+    element width allows them."""
+    assert isa.vtype_legal(32, MF2) and isa.vtype_legal(16, MF2)
+    assert isa.vtype_legal(16, MF4) and isa.vtype_legal(8, MF4)
+    assert not isa.vtype_legal(64, MF2)
+    assert not isa.vtype_legal(64, MF4)
+    assert not isa.vtype_legal(32, MF4)
+    for sew, lmul in isa.legal_vtypes():
+        assert Fraction(sew) / Fraction(lmul) <= isa.ELEN
+
+
+def test_fractional_vlmax_floor():
+    """VLMAX floors exactly: grouped_vlmax, AraConfig.vlmax and the
+    engines' VSETVL cap all agree."""
+    assert isa.grouped_vlmax(8, 8, MF4) == 16
+    assert isa.grouped_vlmax(8, 32, MF2) == 8
+    cfg = AraConfig(lanes=4)
+    assert cfg.vlmax(32, MF2) == cfg.vlmax(32) // 2
+    assert cfg.vlmax(8, MF4) == cfg.vlmax(8) // 4
+    # engine: a VSETVL far beyond the fractional VLMAX caps there
+    eng = _int_engine()
+    vlmax = isa.grouped_vlmax(VLMAX64, 8, MF2)   # 32
+    n = 2 * vlmax
+    mem = np.zeros(2 * n, np.int64)
+    mem[:n] = np.arange(1, n + 1)
+    prog = [isa.VSETVL(10 * n, 8, MF2), isa.VLD(0, 0), isa.VST(0, n)]
+    out, _ = eng.run(prog, mem)
+    np.testing.assert_array_equal(out[n:n + vlmax], mem[:vlmax])
+    assert not out[n + vlmax:].any()             # capped at the floor
+
+
+def test_fractional_emul_product_rules():
+    """EMUL stays a product at fractions: widening at mf2 has EMUL=1
+    (any register base, but still no source overlap), segments at mf4
+    span consecutive single registers up to nf*lmul <= 8."""
+    isa.check_insn(isa.VFWMUL(3, 1, 2), 16, MF2)     # EMUL=1: legal
+    isa.check_insn(isa.VFWMUL(5, 1, 2), 16, MF4)     # EMUL=mf2: legal
+    with pytest.raises(ValueError):                  # dst == src overlap
+        isa.check_insn(isa.VFWMUL(3, 3, 1), 16, MF2)
+    isa.check_insn(isa.VLSEG(0, 0, nf=8), 8, MF2)    # 8 * 1/2 <= 8
+    reads, writes = isa.reg_groups(isa.VLSEG(4, 0, nf=3), MF2)
+    assert writes == [(4, 1), (5, 1), (6, 1)]        # consecutive regs
+    with pytest.raises(ValueError):                  # span off the file
+        isa.check_insn(isa.VLSEG(30, 0, nf=4), 8, MF2)
+
+
+@pytest.mark.parametrize("sew,lmul", [(32, MF2), (16, MF2), (16, MF4),
+                                      (8, MF2), (8, MF4)])
+def test_fractional_lmul_execution_roundtrip(sew, lmul):
+    """Segment + arithmetic programs execute correctly at every
+    fractional cell (int32-exact machine; fields in consecutive regs)."""
+    eng = _int_engine()
+    vl = isa.grouped_vlmax(VLMAX64, sew, lmul)
+    r = np.random.RandomState(int(sew * 7) + isa.group_span(lmul))
+    mem = np.zeros(6 * vl + 16, np.int64)
+    mem[:2 * vl] = r.randint(-60, 60, 2 * vl)    # sums stay in int8 range
+    op = isa.VADD if sew in isa.INT_SEWS else isa.VFADD
+    prog = [isa.VSETVL(vl, sew, lmul),
+            isa.VLSEG(1, 0, 2),                  # fields -> v1, v2
+            op(3, 1, 2),
+            isa.VST(3, 2 * vl),
+            isa.VSSEG(1, 3 * vl + 16, 2)]        # re-interleave
+    out, _ = eng.run(prog, mem)
+    want = mem[0:2 * vl:2] + mem[1:2 * vl:2]
+    np.testing.assert_array_equal(out[2 * vl:3 * vl], want)
+    np.testing.assert_array_equal(out[3 * vl + 16:3 * vl + 16 + 2 * vl],
+                                  mem[:2 * vl])
+
+
+def test_mixed_width_lmul_pick():
+    """The reason fractional LMUL exists: int8 operands under an int32
+    accumulator group at mf4, int16 under int32 at mf2 — and the picks
+    flow into strip/tile arithmetic exactly."""
+    assert mixed_width_lmul(1, 32, 8) == Fraction(1, 4)
+    assert mixed_width_lmul(1, 32, 16) == Fraction(1, 2)
+    assert mixed_width_lmul(2, 32, 16) == 1
+    assert mixed_width_lmul(4, 64, 16) == 1
+    assert isa.format_lmul(mixed_width_lmul(1, 32, 8)) == "mf4"
+    assert strip_lengths(100, 64, MF2) == [32, 32, 32, 4]
+    assert lmul_tile(256, 64, MF2) == 32
+    assert lmul_tile(256, 64, MF4) == 16
+
+
+# ---------------------------------------------------------------------------
+# int8 perf rows + the kernel route
+# ---------------------------------------------------------------------------
+
+
+def test_perfmodel_int8_row():
+    """ew_bits=8 wires through the closed form: per-SEW peak from the
+    single-source table, near-peak utilization at the marquee size, and
+    memory-bound daxpy moving 1/2 the bytes of SEW=16."""
+    perf = pm.matmul_perf(CFG, 256, ew_bits=8)
+    assert perf.peak_flop_per_cycle == CFG.peak_flop_per_cycle(8) == 32
+    assert 0.9 <= perf.utilization <= 1.0
+    c8 = pm.daxpy_cycles(CFG, 4096, ew_bits=8)
+    c16 = pm.daxpy_cycles(CFG, 4096, ew_bits=16)
+    assert 1.8 <= (c16 - 24) / (c8 - 24) <= 2.2
+
+
+def test_scoreboard_int8_alu_speedup():
+    """The event scoreboard agrees in direction: the int8 matmul (VMUL+
+    VADD on the 8-way ALU) beats the 64-bit FPU baseline clearly, but
+    lands near half the raw 8x split — the honest cost of having no
+    integer MACC (two ALU slots per accumulation)."""
+    n = 256
+    flops = 2.0 * n ** 3
+    base = simulate_timing(isa.matmul_program(n, 0, n * n, 2 * n * n,
+                                              vlmax=n), CFG, vlmax=n)
+    int8 = simulate_timing(isa.imatmul_program(n, 0, n * n, 2 * n * n,
+                                               vlmax=n), CFG, vlmax=n)
+    speedup = int8.flop_per_cycle(flops) / base.flop_per_cycle(flops)
+    assert 2.5 <= speedup <= 8.0, speedup
+    assert int8.unit_busy["alu"] > 0           # it really ran on the ALU
+
+
+def test_imatmul_program_semantics():
+    """The integer matmul builder computes A@B + C exactly (small ints,
+    no wrap) on the fixed-point machine."""
+    n = 8
+    r = np.random.RandomState(3)
+    A, B, C = (r.randint(-4, 5, (n, n)) for _ in range(3))
+    mem = np.concatenate([A.ravel(), B.ravel(), C.ravel()]).astype(np.int64)
+    prog = isa.imatmul_program(n, 0, n * n, 2 * n * n, t=4, vlmax=n)
+    out, _ = _int_engine(vlmax=n).run(prog, mem)
+    np.testing.assert_array_equal(out[2 * n * n:].reshape(n, n), A @ B + C)
+
+
+def test_matmul_int8_kernel_exact_and_requantized(rng):
+    """Pallas int8 route: int32 accumulation is exact; out_dtype=int8
+    requantizes with the VSMUL rounding rule (rnu) and saturates."""
+    a = jnp.asarray(rng.randint(-64, 64, (32, 48)), jnp.int8)
+    b = jnp.asarray(rng.randint(-64, 64, (48, 64)), jnp.int8)
+    want = np.asarray(a, np.int32) @ np.asarray(b, np.int32)
+    got = ops.matmul_int8(a, b, bm=16, bn=16, bk=16, interpret=True)
+    assert got.dtype == jnp.int32
+    np.testing.assert_array_equal(np.asarray(got), want)
+    got8 = ops.matmul_int8(a, b, bm=16, bn=16, bk=16, interpret=True,
+                           out_dtype=jnp.int8, shift=7)
+    assert got8.dtype == jnp.int8
+    want8 = np.clip((want + 64) >> 7, -128, 127).astype(np.int8)
+    np.testing.assert_array_equal(np.asarray(got8), want8)
+
+
+def test_matmul_int8_lmul_blocks_match(rng):
+    """Register-grouping block pick applies to the int8 route too —
+    including a fractional pick, which narrows the N block."""
+    a = jnp.asarray(rng.randint(-32, 32, (32, 32)), jnp.int8)
+    b = jnp.asarray(rng.randint(-32, 32, (32, 32)), jnp.int8)
+    want = ops.matmul_int8(a, b, bm=16, bn=16, bk=16, interpret=True)
+    got2 = ops.matmul_int8(a, b, bm=16, bn=16, bk=16, lmul=2,
+                           interpret=True)
+    gotf = ops.matmul_int8(a, b, bm=16, bn=16, bk=16, lmul=MF2,
+                           interpret=True)
+    np.testing.assert_array_equal(np.asarray(got2), np.asarray(want))
+    np.testing.assert_array_equal(np.asarray(gotf), np.asarray(want))
+
+
+def test_int8_memory_path_roundtrips():
+    """The SEW=8 spellings of the memory-path contracts (segment AoS
+    round-trip, indexed gather/scatter with clamping) — int8-range
+    indices, integer data, exact equality."""
+    eng = _int_engine()
+    vl = 16
+    r = np.random.RandomState(11)
+    perm = r.permutation(vl)
+    mem = np.zeros(4 * vl + 8, np.int64)
+    mem[:vl] = perm
+    mem[vl:2 * vl] = r.randint(-100, 100, vl)
+    prog = [isa.VSETVL(vl, 8), isa.VLD(31, 0),
+            isa.VLUXEI(0, vl, 31), isa.VST(0, 2 * vl + 8),
+            isa.VSUXEI(0, vl, 31)]
+    out, _ = eng.run(prog, mem)
+    np.testing.assert_array_equal(out[2 * vl + 8:3 * vl + 8],
+                                  mem[vl:2 * vl][perm])
+    np.testing.assert_array_equal(out[vl:2 * vl], mem[vl:2 * vl])
+    # OOB clamp at int8-representable indices
+    mem2 = np.arange(100, dtype=np.int64)
+    mem2[0], mem2[1] = -50, 120                  # clamp to 0 and 99
+    prog2 = [isa.VSETVL(2, 8), isa.VLD(31, 0), isa.VLUXEI(0, 0, 31),
+             isa.VST(0, 40)]
+    out2, _ = eng.run(prog2, mem2)
+    assert out2[40] == -50 and out2[41] == 99

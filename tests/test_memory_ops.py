@@ -11,7 +11,14 @@ Covers the ISSUE-2 memory-path contract:
   same semantics VGATHER established in PR 1 — and colliding scatters
   resolve highest-element-index-wins, deterministically.
 - grouping: at LMUL > 1 a vl spanning multiple registers round-trips
-  through the flat group view.
+  through the flat group view; fractional LMUL (mf2/mf4) round-trips
+  through its floored VLMAX and single-register field spans.
+
+These property tests sweep the FLOAT widths (isa.FP_SEWS) — the rounding
+helper below is a float-format contract; the SEW=8 integer spellings of
+the same memory paths live in tests/test_int8.py. Illegal vtype cells
+(SEW/LMUL > ELEN, e.g. mf4 at SEW=64) are skipped via isa.vtype_legal —
+the exact rule check_insn enforces.
 """
 import jax.numpy as jnp
 import numpy as np
@@ -36,7 +43,7 @@ def _rounded(x, sew):
 
 
 @settings(max_examples=24, deadline=None)
-@given(sew=st.sampled_from(list(isa.SEWS)),
+@given(sew=st.sampled_from(list(isa.FP_SEWS)),
        lmul=st.sampled_from([1, 2, 4]),
        nf=st.integers(2, 3), seed=st.integers(0, 999))
 def test_vlseg_vsseg_roundtrip(sew, lmul, nf, seed):
@@ -44,7 +51,7 @@ def test_vlseg_vsseg_roundtrip(sew, lmul, nf, seed):
     if nf * lmul > max(isa.LMULS):
         nf = max(isa.LMULS) // lmul
     r = np.random.RandomState(seed)
-    vl = VLMAX64 * (64 // sew) * lmul          # full group
+    vl = isa.grouped_vlmax(VLMAX64, sew, lmul)  # full group
     mem = np.zeros(2 * nf * vl + 16)
     mem[:nf * vl] = r.uniform(-1, 1, nf * vl)
     prog = [isa.VSETVL(vl, sew, lmul),
@@ -57,22 +64,26 @@ def test_vlseg_vsseg_roundtrip(sew, lmul, nf, seed):
 
 
 @settings(max_examples=24, deadline=None)
-@given(sew=st.sampled_from(list(isa.SEWS)),
+@given(sew=st.sampled_from(list(isa.FP_SEWS)),
        lmul=st.sampled_from(list(isa.LMULS)), seed=st.integers(0, 999))
 def test_vlseg_field_extraction_matches_numpy(sew, lmul, seed):
-    """Each field group holds the strided numpy slice mem[f::nf]."""
+    """Each field group holds the strided numpy slice mem[f::nf] — at
+    fractional LMUL the fields land in consecutive single registers."""
+    if not isa.vtype_legal(sew, lmul):
+        return                                  # e.g. mf4 at SEW=64
+    span = isa.group_span(lmul)
     nf = 2 if lmul <= 4 else 1
     if nf < 2:
         return                                  # no room for fields
     r = np.random.RandomState(seed)
-    vl = max(2, VLMAX64 * (64 // sew) * lmul // 2)
+    vl = max(2, isa.grouped_vlmax(VLMAX64, sew, lmul) // 2)
     mem = np.zeros(nf * vl + 2 * vl + 8)
     mem[:nf * vl] = r.uniform(-1, 1, nf * vl)
     store0, store1 = nf * vl, nf * vl + vl + 4
     prog = [isa.VSETVL(vl, sew, lmul),
             isa.VLSEG(0, 0, nf),
             isa.VST(0, store0),                 # field 0
-            isa.VST(lmul, store1)]              # field 1
+            isa.VST(span, store1)]              # field 1
     out, _ = _engine().run(prog, mem)
     np.testing.assert_allclose(out[store0:store0 + vl],
                                _rounded(mem[0:nf * vl:nf], sew),
@@ -83,18 +94,21 @@ def test_vlseg_field_extraction_matches_numpy(sew, lmul, seed):
 
 
 @settings(max_examples=24, deadline=None)
-@given(sew=st.sampled_from(list(isa.SEWS)),
+@given(sew=st.sampled_from(list(isa.FP_SEWS)),
        lmul=st.sampled_from(list(isa.LMULS)), seed=st.integers(0, 999))
 def test_vluxei_vsuxei_roundtrip(sew, lmul, seed):
     """Gather by a permutation index, scatter back by the same index:
-    identity (to SEW rounding) — at every SEW × LMUL."""
+    identity (to SEW rounding) — at every legal SEW × LMUL."""
+    if not isa.vtype_legal(sew, lmul):
+        return
     r = np.random.RandomState(seed)
-    vl = VLMAX64 * (64 // sew) * lmul
+    vl = isa.grouped_vlmax(VLMAX64, sew, lmul)
     perm = r.permutation(vl)
     mem = np.zeros(3 * vl + 8)
     mem[:vl] = perm                            # index vector (exact ints)
     mem[vl:2 * vl] = r.uniform(-1, 1, vl)      # data
-    idx_grp, data_grp = isa.NUM_VREGS - lmul, 0
+    idx_grp = isa.NUM_VREGS - isa.group_span(lmul)
+    data_grp = 0
     prog = [isa.VSETVL(vl, sew, lmul),
             isa.VLD(idx_grp, 0),
             isa.VLUXEI(data_grp, vl, idx_grp),     # data[perm[i]]
@@ -110,15 +124,17 @@ def test_vluxei_vsuxei_roundtrip(sew, lmul, seed):
 
 
 @pytest.mark.parametrize("lmul", list(isa.LMULS))
-@pytest.mark.parametrize("sew", list(isa.SEWS))
+@pytest.mark.parametrize("sew", list(isa.FP_SEWS))
 def test_indexed_oob_clamps_to_edges(sew, lmul):
     """OOB indexed loads clamp to mem[0]/mem[-1] — the contract VGATHER
     established, now shared by VLUXEI (loads) and VSUXEI (stores)."""
-    vl = max(2, VLMAX64 * (64 // sew) * lmul // 2)
+    if not isa.vtype_legal(sew, lmul):
+        pytest.skip(f"SEW/LMUL > ELEN: {sew}/{isa.format_lmul(lmul)}")
+    vl = max(2, isa.grouped_vlmax(VLMAX64, sew, lmul) // 2)
     size = 4 * vl
     mem = np.arange(size, dtype=float)
     mem[0], mem[1] = -50.0, 10 * size          # clamps to 0 and size-1
-    idx_grp = isa.NUM_VREGS - lmul
+    idx_grp = isa.NUM_VREGS - isa.group_span(lmul)
     prog = [isa.VSETVL(vl, sew, lmul),
             isa.VLD(idx_grp, 0),
             isa.VLUXEI(0, 0, idx_grp),

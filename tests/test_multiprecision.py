@@ -80,7 +80,7 @@ def test_widening_illegal_at_sew64():
     with pytest.raises(ValueError):      # scoreboard agrees it's illegal
         simulate_timing(prog, cfg, vlmax=8)
     with pytest.raises(ValueError):      # ... and rejects unknown SEWs
-        simulate_timing([isa.VSETVL(8, 8)], cfg, vlmax=8)
+        simulate_timing([isa.VSETVL(8, 4)], cfg, vlmax=8)
 
 
 def test_gather_oob_clamps_consistently():

@@ -31,18 +31,21 @@ DAXPY_N = 256                        # §V-B size
 
 
 def compute_table():
+    # every LEGAL vtype cell: the pre-existing SEW>=16 × integer-LMUL
+    # keys keep their exact spelling (format_lmul(2) == "m2"), and the
+    # SEW=8 row plus the mf2/mf4 columns add new keys alongside
     table = {}
     for lanes in LANES:
         cfg = AraConfig(lanes=lanes)
-        for sew in isa.SEWS:
-            for lmul in isa.LMULS:
-                for n in SIZES:
-                    key = f"matmul/l{lanes}/n{n}/sew{sew}/m{lmul}"
-                    table[key] = pm.matmul_cycles(cfg, n, ew_bits=sew,
-                                                  lmul=lmul)
-                key = f"daxpy/l{lanes}/n{DAXPY_N}/sew{sew}/m{lmul}"
-                table[key] = pm.daxpy_cycles(cfg, DAXPY_N, ew_bits=sew,
-                                             lmul=lmul)
+        for sew, lmul in isa.legal_vtypes():
+            lm = isa.format_lmul(lmul)
+            for n in SIZES:
+                key = f"matmul/l{lanes}/n{n}/sew{sew}/{lm}"
+                table[key] = pm.matmul_cycles(cfg, n, ew_bits=sew,
+                                              lmul=lmul)
+            key = f"daxpy/l{lanes}/n{DAXPY_N}/sew{sew}/{lm}"
+            table[key] = pm.daxpy_cycles(cfg, DAXPY_N, ew_bits=sew,
+                                         lmul=lmul)
     return table
 
 
@@ -76,9 +79,26 @@ def test_golden_table_encodes_lmul_amortization():
     for sew in isa.SEWS:
         for lanes in LANES:
             c = {m: want[f"matmul/l{lanes}/n256/sew{sew}/m{m}"]
-                 for m in isa.LMULS}
+                 for m in (1, 2, 4, 8)}
             if AraConfig(lanes=lanes).vlmax(sew) < 256:
                 assert c[4] < c[1], (sew, lanes, c)
             else:
                 assert c[4] == c[1], (sew, lanes, c)
                 assert c[8] > c[1], (sew, lanes, c)   # over-grouping costs
+
+
+def test_golden_table_fractional_lmul_is_honest():
+    """The mf2/mf4 keys witness the fractional contract: sub-register
+    groups shrink VLMAX, so they can never beat LMUL=1 — fractional
+    LMUL exists for mixed-width EMUL legality, not for speed — and the
+    memory-bound daxpy pays extra strip-mine trips for it."""
+    with open(GOLDEN) as f:
+        want = json.load(f)
+    for lanes in LANES:
+        for sew, lmul in isa.legal_vtypes(lmuls=(isa.parse_lmul("mf4"),
+                                                 isa.parse_lmul("mf2"))):
+            lm = isa.format_lmul(lmul)
+            assert want[f"matmul/l{lanes}/n256/sew{sew}/{lm}"] >= \
+                want[f"matmul/l{lanes}/n256/sew{sew}/m1"], (lanes, sew, lm)
+            assert want[f"daxpy/l{lanes}/n256/sew{sew}/{lm}"] >= \
+                want[f"daxpy/l{lanes}/n256/sew{sew}/m1"], (lanes, sew, lm)

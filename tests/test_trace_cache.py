@@ -43,17 +43,19 @@ def _prog(op, sew=32, lmul=2):
 
 
 def test_same_signature_reuses_compiled_executable():
-    """Four programs with different opcodes, operands AND vtype — same
-    shapes — run through one compile; opcodes are data, not structure."""
+    """Five programs with different opcodes, operands AND vtype — same
+    shapes, float AND integer/saturating op classes — run through one
+    compile; opcodes are data, not structure."""
     eng = _engine()
     mem = np.arange(64, dtype=float)
     outs = [eng.run(_prog(op, sew, lmul), mem)[0]
             for op, sew, lmul in [(isa.VFMUL(0, 0, 0), 32, 2),
                                   (isa.VFADD(0, 0, 0), 32, 2),
-                                  (isa.VADD(0, 0, 0), 64, 1),
+                                  (isa.VADD(0, 0, 0), 32, 1),
+                                  (isa.VSMUL(0, 0, 0), 8, 1),
                                   (isa.VSLIDE(4, 0, 3), 16, 4)]]
     st = eng.cache.stats
-    assert st.compiles == 1 and st.misses == 1 and st.hits == 3, st
+    assert st.compiles == 1 and st.misses == 1 and st.hits == 4, st
     assert not np.array_equal(outs[0], outs[1])   # really different progs
 
 
@@ -85,7 +87,7 @@ def test_cached_equals_fresh_bit_identical():
     the first run bit for bit."""
     eng = _engine()
     progs, mems, srs = [], [], []
-    combos = [(s, l) for s in isa.SEWS for l in isa.LMULS]
+    combos = diff.vtype_combos()             # the 21 legal cells
     for i, (sew, lmul) in enumerate(combos):
         p, m, s = diff.random_program(np.random.RandomState(7 + i),
                                       sew, lmul, n_ops=10)
