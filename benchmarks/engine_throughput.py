@@ -16,8 +16,11 @@ path, plus the cached_batched/uncached speedup — the acceptance bar is
 >= 10× (unchanged). A second sweep records programs/sec for every
 SEW=8 cell (lmul ∈ {mf4, mf2, 1, 2, 4, 8}) on the cached+batched path
 under ``int8_cells``, so the integer-lane rows of the differential grid
-are tracked alongside. Results land in ``BENCH_engines.json`` (CI
-uploads it as an artifact) and print as
+are tracked alongside, and a third sweep runs a mask/compare/reduction-
+heavy op mix over sampled vtype corners under ``mask_cells`` (PR 6: vm
+and the new op classes are data, not structure, so these must hold the
+same one-signature throughput). Results land in ``BENCH_engines.json``
+(CI uploads it as an artifact) and print as
 ``engine_throughput,key=value,...`` lines.
 
   PYTHONPATH=src python benchmarks/engine_throughput.py \
@@ -42,15 +45,22 @@ from repro.testing import differential as diff
 from repro.core.vector_engine import ReferenceEngine
 
 
-def make_batch(n, sew, lmul, n_ops=14, seed0=0):
+def make_batch(n, sew, lmul, n_ops=14, seed0=0, ops=diff.DEFAULT_OPS):
     progs, mems, srs = [], [], []
     for i in range(n):
         p, m, s = diff.random_program(np.random.RandomState(seed0 + i),
-                                      sew, lmul, n_ops=n_ops)
+                                      sew, lmul, n_ops=n_ops, ops=ops)
         progs.append(p)
         mems.append(m)
         srs.append(s)
     return progs, mems, srs
+
+
+# masking/reduction-heavy op mix for the PR-6 cells: compares, mask
+# logicals, merge and the reduction class, leavened with loads/stores
+# and one arithmetic op per class so masks have values to govern
+MASK_OPS = (diff.INT_CMP_POOL + diff.FP_CMP_POOL + diff.MASK_POOL
+            + diff.RED_POOL + ("vadd", "vfadd", "vld", "vst"))
 
 
 def _rate(n_programs, seconds, compiles):
@@ -110,6 +120,21 @@ def bench(n=24, sew=32, lmul=2, uncached_n=3, reps=3):
         int8_cells[isa.format_lmul(lm8)] = _rate(
             n * reps, time.perf_counter() - t0, stats.compiles)
 
+    # masking/reduction cells (PR 6): one batched run_many per sampled
+    # vtype corner on a mask/compare/reduction-heavy op mix — vm is one
+    # more data column, so these ride the same cached signature too
+    mask_cells = {}
+    eng.cache.clear()
+    stats.reset()
+    for ms, ml in ((64, 1), (32, 2), (16, isa.parse_lmul("mf2")), (8, 4)):
+        pm_, mm_, sm_ = make_batch(n, ms, ml, ops=MASK_OPS)
+        eng.run_many(pm_, mm_, [dict(s) for s in sm_], window=win)  # warm
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            eng.run_many(pm_, mm_, [dict(s) for s in sm_], window=win)
+        mask_cells[f"sew{ms}_{isa.format_lmul(ml)}"] = _rate(
+            n * reps, time.perf_counter() - t0, stats.compiles)
+
     return {
         "bench": "engine_throughput",
         "engine": "reference(staged)",
@@ -122,6 +147,7 @@ def bench(n=24, sew=32, lmul=2, uncached_n=3, reps=3):
         "cached": cached,
         "cached_batched": batched,
         "int8_cells": int8_cells,
+        "mask_cells": mask_cells,
         "speedup_cached_batched_vs_uncached": round(
             batched["programs_per_sec"] / uncached["programs_per_sec"], 1),
         "speedup_cached_vs_uncached": round(
@@ -150,6 +176,10 @@ def main():
         print("engine_throughput," +
               ",".join(f"{k}={v}" for k, v in
                        {"path": f"int8_{lm}", **row}.items()), flush=True)
+    for cell, row in res["mask_cells"].items():
+        print("engine_throughput," +
+              ",".join(f"{k}={v}" for k, v in
+                       {"path": f"mask_{cell}", **row}.items()), flush=True)
     print(f"engine_throughput,path=speedup,"
           f"cached_batched_vs_uncached="
           f"{res['speedup_cached_batched_vs_uncached']}")

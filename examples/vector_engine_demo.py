@@ -1,6 +1,9 @@
 """Ara vector-engine demo: run the paper's Listing-1 matmul on the RVV-0.5
 ISA, report cycles from the scoreboard vs the closed-form model vs Eq. (2),
-and reproduce the three execution phases of Fig. 11.
+and reproduce the three execution phases of Fig. 11. Then the RVV 1.0
+masking/reduction upgrade: a vectorized argmax composed from VMSLT-class
+compares, VMERGE and VREDMAX/VREDMIN, and the native reduction's
+scoreboard cycles vs the retired O(log n) slide+add workaround.
 
   PYTHONPATH=src python examples/vector_engine_demo.py [--lanes 4 --n 32]
 """
@@ -48,6 +51,31 @@ def main():
           f"{flops/cyc_model*ghz:.2f} DP-GFLOPS")
     print("unit occupancy (Fig. 11 analogue):",
           {k: round(v, 0) for k, v in tr.unit_busy.items()})
+
+    # --- masks + reductions (RVV 1.0 upgrade) ---------------------------
+    vl = min(32, cfg.vlmax_dp)
+    vals = rng.randn(vl)
+    vals[vl // 3] = vals[2 * vl // 3] = vals.max() + 1.0   # tie
+    mem2 = np.zeros(4 * vl + 64)
+    mem2[:vl] = vals
+    mem2[vl:2 * vl] = np.arange(vl, dtype=float)           # the iota
+    amax = [isa.VSETVL(vl, 32, 1), isa.VLD(4, 0)] \
+        + isa.argmax_program(4, vl, sd=0, huge_sreg=1)
+    _, s = ReferenceEngine(cfg).run(amax, mem2, sregs={1: float(vl + 9)})
+    print(f"\nmasked argmax (VREDMAX+VMFEQ+VMERGE+VREDMIN) over {vl} "
+          f"elements: {int(s[0])} == numpy's {int(np.argmax(vals))} "
+          f"(first-index tie rule)")
+
+    red_native = [isa.VSETVL(vl, 64, 1), isa.VLD(5, 0), isa.VREDSUM(8, 5),
+                  isa.VEXT(1, 8, 0)]
+    red_slides = [isa.VSETVL(vl, 64, 1), isa.VLD(5, 0)] \
+        + isa.slide_reduce_program(5, vl, sd=1)
+    t_nat = simulate_timing(red_native, cfg)
+    t_sld = simulate_timing(red_slides, cfg)
+    print(f"sum-reduce of {vl} elements, scoreboard cycles: "
+          f"native VREDSUM {t_nat.cycles:.0f} vs slide+add workaround "
+          f"{t_sld.cycles:.0f} ({t_sld.cycles / t_nat.cycles:.1f}x; "
+          f"model {pm.reduction_cycles(cfg, vl):.0f})")
 
 
 if __name__ == "__main__":

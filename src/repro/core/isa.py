@@ -96,6 +96,37 @@ f``). ``VLUXEI``/``VSUXEI`` are RVV 1.0 indexed-unordered load/store;
 out-of-range indices clamp to the memory edges exactly like ``VGATHER``,
 and colliding scatter indices resolve highest-element-index-wins — the
 deterministic contract every engine and the oracle share.
+
+Masking, compares, and reductions (RVV 1.0, Ara2/Spatz)
+-------------------------------------------------------
+Arithmetic and memory ops carry a ``vm`` operand (RVV encoding: ``vm=1``
+unmasked — the default — ``vm=0`` masked by ``v0``). A masked op
+executes only where the mask is *active* and leaves masked-off
+destination elements **undisturbed** (mask-undisturbed, the policy Ara2
+commits to); masked stores skip inactive addresses. Mask layout is the
+value model's: element ``i`` of the ``v0`` register *group* (masks group
+exactly like data operands — a documented deviation from RVV's
+one-bit-per-element single-register layout, see docs/isa.md) is active
+iff its value is nonzero. Compares — integer ``VMSEQ``/``VMSNE``/
+``VMSLT``/``VMSLE`` (SEW <= 32) and float ``VMFEQ``/``VMFLT``
+(SEW >= 16) — write exact 0/1 values in that layout; the mask logicals
+``VMAND``/``VMOR``/``VMXOR`` combine activeness bits; ``VMERGE`` is the
+always-masked select ``vd[i] = v0[i] ? va[i] : vb[i]``. The RVV
+v0-overlap rule is enforced by ``check_insn``: a masked op's
+destination group may not overlap the mask group — unless it writes
+mask layout (compares, logicals) or a reduction's scalar result.
+
+Reductions ``VREDSUM``/``VREDMAX``/``VREDMIN`` (any SEW) and the
+widening ``VFWREDSUM`` (float, result at 2·SEW) fold the active body
+of a source group into element 0 of a single destination register,
+leaving every other destination element undisturbed (and writing
+nothing at vl=0). The fold is a fixed binary tree over the
+next-power-of-two element window with identity padding
+(0 / -inf / +inf), so the result is bit-reproducible across every
+engine, lane count, and the numpy oracle — the software spelling of the
+paper's inter-lane reduction tree, and the retirement of the §III-C
+``slide_reduce_program`` workaround. An all-inactive body yields the
+identity (the model folds RVV's scalar-init operand into it).
 """
 from __future__ import annotations
 
@@ -112,6 +143,7 @@ ELEN = 64                        # widest element the datapath moves
 # fractional groupings (exact binary fractions, never floats in keys)
 LMULS = (Fraction(1, 4), Fraction(1, 2), 1, 2, 4, 8)
 VXSAT_SREG = 31                  # scalar reg shadowing the sticky vxsat CSR
+MASK_REG = 0                     # v0: the one architectural mask register
 
 
 def parse_lmul(text):
@@ -175,6 +207,22 @@ def grouped_vlmax(vlmax64: int, sew: int, lmul=1) -> int:
     return int(vlmax64 * (64 // sew) * Fraction(lmul))
 
 
+def vsetvl_grant(avl: int, vlmax64: int, sew: int, lmul=1) -> int:
+    """The RVV ``vsetvl`` grant rule, explicit and single-sourced.
+
+    An AVL request is *never* an error: the granted vl is
+    ``min(avl, VLMAX(sew, lmul))``. The two edges the rule commits to:
+    ``avl=0`` grants vl=0 — every subsequent data op is then a complete
+    no-op (nothing read, nothing written, registers and memory
+    undisturbed) while the vtype itself still takes effect — and any
+    over-ask (``avl > VLMAX``, including absurd requests) grants exactly
+    VLMAX. Negative AVL is rejected by ``check_insn`` (it is a program
+    bug, not a length request). Both engines, the scoreboard and the
+    numpy oracle resolve VSETVL through this one function.
+    """
+    return min(int(avl), grouped_vlmax(vlmax64, sew, lmul))
+
+
 @dataclasses.dataclass(frozen=True)
 class Insn:
     unit = "none"
@@ -192,6 +240,7 @@ class VSETVL(Insn):
 class VLD(Insn):                 # unit-stride load
     vd: int
     addr: int                    # element offset into memory
+    vm: int = 1
     unit = "vlsu"
 
 
@@ -200,6 +249,7 @@ class VLDS(Insn):                # constant-stride load
     vd: int
     addr: int
     stride: int
+    vm: int = 1
     unit = "vlsu"
 
 
@@ -208,6 +258,7 @@ class VGATHER(Insn):             # indexed load: vd[i] = mem[addr + vidx[i]]
     vd: int
     addr: int
     vidx: int
+    vm: int = 1
     unit = "vlsu"
 
 
@@ -215,6 +266,7 @@ class VGATHER(Insn):             # indexed load: vd[i] = mem[addr + vidx[i]]
 class VST(Insn):
     vs: int
     addr: int
+    vm: int = 1
     unit = "vlsu"
 
 
@@ -239,6 +291,7 @@ class VLUXEI(Insn):              # indexed-unordered load (RVV 1.0 vluxei):
     vd: int                      #   vd[i] = mem[clamp(addr + vidx[i])]
     addr: int
     vidx: int
+    vm: int = 1
     unit = "vlsu"
 
 
@@ -247,6 +300,7 @@ class VSUXEI(Insn):              # indexed-unordered store (scatter):
     vs: int                      #   mem[clamp(addr + vidx[i])] = vs[i];
     addr: int                    #   collisions: highest element index wins
     vidx: int
+    vm: int = 1
     unit = "vlsu"
 
 
@@ -255,6 +309,7 @@ class VFMA(Insn):                # vd <- va * vb + vd
     vd: int
     va: int
     vb: int
+    vm: int = 1
     unit = "fpu"
 
 
@@ -263,6 +318,7 @@ class VFMA_VS(Insn):             # vd <- scalar(vs_scalar) * vb + vd
     vd: int
     vs_scalar: int               # scalar register id
     vb: int
+    vm: int = 1
     unit = "fpu"
 
 
@@ -271,6 +327,7 @@ class VFADD(Insn):
     vd: int
     va: int
     vb: int
+    vm: int = 1
     unit = "fpu"
 
 
@@ -279,6 +336,7 @@ class VFMUL(Insn):
     vd: int
     va: int
     vb: int
+    vm: int = 1
     unit = "fpu"
 
 
@@ -287,6 +345,7 @@ class VFWMUL(Insn):              # widening: vd(2*sew) <- va(sew) * vb(sew)
     vd: int
     va: int
     vb: int
+    vm: int = 1
     unit = "fpu"
 
 
@@ -295,6 +354,7 @@ class VFWMA(Insn):               # widening FMA: vd(2*sew) += va(sew)*vb(sew)
     vd: int
     va: int
     vb: int
+    vm: int = 1
     unit = "fpu"
 
 
@@ -302,6 +362,7 @@ class VFWMA(Insn):               # widening FMA: vd(2*sew) += va(sew)*vb(sew)
 class VFNCVT(Insn):              # narrowing convert: vd(sew) <- vs(2*sew)
     vd: int
     vs: int
+    vm: int = 1
     unit = "fpu"
 
 
@@ -310,6 +371,7 @@ class VADD(Insn):                # integer add, wraps mod 2^SEW
     vd: int
     va: int
     vb: int
+    vm: int = 1
     unit = "alu"
 
 
@@ -318,6 +380,7 @@ class VSUB(Insn):                # integer subtract, wraps mod 2^SEW
     vd: int
     va: int
     vb: int
+    vm: int = 1
     unit = "alu"
 
 
@@ -326,6 +389,7 @@ class VMUL(Insn):                # integer multiply, wraps mod 2^SEW
     vd: int
     va: int
     vb: int
+    vm: int = 1
     unit = "alu"
 
 
@@ -334,6 +398,7 @@ class VSADDU(Insn):              # saturating unsigned add (fixed-point)
     vd: int
     va: int
     vb: int
+    vm: int = 1
     unit = "alu"
 
 
@@ -342,6 +407,7 @@ class VSADD(Insn):               # saturating signed add
     vd: int
     va: int
     vb: int
+    vm: int = 1
     unit = "alu"
 
 
@@ -350,6 +416,7 @@ class VSSUB(Insn):               # saturating signed subtract
     vd: int
     va: int
     vb: int
+    vm: int = 1
     unit = "alu"
 
 
@@ -358,6 +425,7 @@ class VSMUL(Insn):               # fractional multiply: sat((a*b + rnd) >> SEW-1
     vd: int                      # vxrm fixed at rnu; saturation sets vxsat
     va: int
     vb: int
+    vm: int = 1
     unit = "alu"
 
 
@@ -381,6 +449,124 @@ class VSLIDE(Insn):              # vd[i] <- vs[i + amount]  (slide-down)
     vd: int
     vs: int
     amount: int
+    unit = "sldu"
+
+
+@dataclasses.dataclass(frozen=True)
+class VMSEQ(Insn):               # mask compare: vd[i] <- va[i] == vb[i]
+    vd: int                      # writes exact 0/1 (mask layout); integer
+    va: int                      # class, compares SEW-wide int views
+    vb: int
+    vm: int = 1
+    unit = "mask"
+
+
+@dataclasses.dataclass(frozen=True)
+class VMSNE(Insn):               # mask compare: vd[i] <- va[i] != vb[i]
+    vd: int
+    va: int
+    vb: int
+    vm: int = 1
+    unit = "mask"
+
+
+@dataclasses.dataclass(frozen=True)
+class VMSLT(Insn):               # mask compare: vd[i] <- va[i] < vb[i]
+    vd: int                      # (signed, two's complement)
+    va: int
+    vb: int
+    vm: int = 1
+    unit = "mask"
+
+
+@dataclasses.dataclass(frozen=True)
+class VMSLE(Insn):               # mask compare: vd[i] <- va[i] <= vb[i]
+    vd: int
+    va: int
+    vb: int
+    vm: int = 1
+    unit = "mask"
+
+
+@dataclasses.dataclass(frozen=True)
+class VMFEQ(Insn):               # float mask compare: vd[i] <- va[i] == vb[i]
+    vd: int
+    va: int
+    vb: int
+    vm: int = 1
+    unit = "mask"
+
+
+@dataclasses.dataclass(frozen=True)
+class VMFLT(Insn):               # float mask compare: vd[i] <- va[i] < vb[i]
+    vd: int
+    va: int
+    vb: int
+    vm: int = 1
+    unit = "mask"
+
+
+@dataclasses.dataclass(frozen=True)
+class VMAND(Insn):               # mask logical: vd[i] <- act(va[i]) & act(vb[i])
+    vd: int                      # activeness = nonzero; writes exact 0/1
+    va: int
+    vb: int
+    unit = "mask"
+
+
+@dataclasses.dataclass(frozen=True)
+class VMOR(Insn):                # mask logical: vd[i] <- act(va[i]) | act(vb[i])
+    vd: int
+    va: int
+    vb: int
+    unit = "mask"
+
+
+@dataclasses.dataclass(frozen=True)
+class VMXOR(Insn):               # mask logical: vd[i] <- act(va[i]) ^ act(vb[i])
+    vd: int
+    va: int
+    vb: int
+    unit = "mask"
+
+
+@dataclasses.dataclass(frozen=True)
+class VMERGE(Insn):              # always-masked select:
+    vd: int                      #   vd[i] <- act(v0[i]) ? va[i] : vb[i]
+    va: int
+    vb: int
+    unit = "mask"
+
+
+@dataclasses.dataclass(frozen=True)
+class VREDSUM(Insn):             # vd[0] <- treesum(active body of vs)
+    vd: int                      # fixed binary tree, identity padding 0;
+    vs: int                      # tail of vd (elements >= 1) undisturbed
+    vm: int = 1
+    unit = "sldu"
+
+
+@dataclasses.dataclass(frozen=True)
+class VREDMAX(Insn):             # vd[0] <- max over active body (identity -inf
+    vd: int                      # / int min)
+    vs: int
+    vm: int = 1
+    unit = "sldu"
+
+
+@dataclasses.dataclass(frozen=True)
+class VREDMIN(Insn):             # vd[0] <- min over active body (identity +inf
+    vd: int                      # / int max)
+    vs: int
+    vm: int = 1
+    unit = "sldu"
+
+
+@dataclasses.dataclass(frozen=True)
+class VFWREDSUM(Insn):           # widening float reduction: vd[0] at 2*SEW
+    vd: int                      # (single rounding per tree node at 2*SEW)
+    vs: int
+    vm: int = 1
     unit = "sldu"
 
 
@@ -422,12 +608,34 @@ _VOPS = {
     VINS: (("vd", False, "w"),),
     VEXT: (("vs", False, "r"),),
     VSLIDE: (("vd", False, "w"), ("vs", False, "r")),
+    VMSEQ: (("vd", False, "w"), ("va", False, "r"), ("vb", False, "r")),
+    VMSNE: (("vd", False, "w"), ("va", False, "r"), ("vb", False, "r")),
+    VMSLT: (("vd", False, "w"), ("va", False, "r"), ("vb", False, "r")),
+    VMSLE: (("vd", False, "w"), ("va", False, "r"), ("vb", False, "r")),
+    VMFEQ: (("vd", False, "w"), ("va", False, "r"), ("vb", False, "r")),
+    VMFLT: (("vd", False, "w"), ("va", False, "r"), ("vb", False, "r")),
+    VMAND: (("vd", False, "w"), ("va", False, "r"), ("vb", False, "r")),
+    VMOR: (("vd", False, "w"), ("va", False, "r"), ("vb", False, "r")),
+    VMXOR: (("vd", False, "w"), ("va", False, "r"), ("vb", False, "r")),
+    VMERGE: (("vd", False, "w"), ("va", False, "r"), ("vb", False, "r")),
+    # reductions read a full source group but write ONE register's
+    # element 0 — the scalar-destination span is patched in reg_groups
+    VREDSUM: (("vd", False, "w"), ("vs", False, "r")),
+    VREDMAX: (("vd", False, "w"), ("vs", False, "r")),
+    VREDMIN: (("vd", False, "w"), ("vs", False, "r")),
+    VFWREDSUM: (("vd", False, "w"), ("vs", False, "r")),
 }
 
 _WIDENING_OPS = (VFWMUL, VFWMA)
 _FP_OPS = (VFMA, VFMA_VS, VFADD, VFMUL, VFWMUL, VFWMA, VFNCVT)
 _INT_OPS = (VADD, VSUB, VMUL, VSADDU, VSADD, VSSUB, VSMUL)
 _SAT_OPS = (VSADDU, VSADD, VSSUB, VSMUL)
+_INT_CMP = (VMSEQ, VMSNE, VMSLT, VMSLE)
+_FP_CMP = (VMFEQ, VMFLT)
+_MASK_LOGICAL = (VMAND, VMOR, VMXOR)
+# ops whose destination IS a mask (exempt from the v0-overlap rule)
+_MASK_WRITERS = _INT_CMP + _FP_CMP + _MASK_LOGICAL
+_REDUCTIONS = (VREDSUM, VREDMAX, VREDMIN, VFWREDSUM)
 
 
 def check_vtype(sew: int, lmul=1):
@@ -488,6 +696,11 @@ def reg_groups(ins, lmul=1):
                 reads.append(grp)
             if "w" in mode:
                 writes.append(grp)
+    if t in _REDUCTIONS:
+        # scalar destination: element 0 of ONE register, tail undisturbed
+        writes = [(ins.vd, 1)]
+    if getattr(ins, "vm", 1) == 0 or t is VMERGE:
+        reads.append((MASK_REG, span))   # implicit v0 mask-group read
     return reads, writes
 
 
@@ -509,10 +722,28 @@ def check_insn(ins, sew: int, lmul=1):
     t = type(ins)
     name = t.__name__
     if t is VSETVL:
+        if ins.vl < 0:
+            raise ValueError(f"VSETVL: negative AVL {ins.vl}")
         check_vtype(ins.sew, ins.lmul)
         return
     span = group_span(lmul)
     wspan = group_span(2 * Fraction(lmul))
+    if t in _INT_CMP and sew not in INT_SEWS:
+        raise ValueError(
+            f"{name} illegal at SEW={sew} (integer compares share the "
+            f"integer class gate: SEW in {INT_SEWS})")
+    if t in _FP_CMP and sew not in FP_SEWS:
+        raise ValueError(
+            f"{name} illegal at SEW={sew} (float compares need a float "
+            f"format: SEW in {FP_SEWS})")
+    if t is VFWREDSUM:
+        if sew not in FP_SEWS:
+            raise ValueError(
+                f"VFWREDSUM illegal at SEW={sew} (float reduction needs a "
+                f"float format)")
+        if sew == max(SEWS):
+            raise ValueError(
+                f"VFWREDSUM illegal at SEW={sew} (2*SEW exceeds ELEN=64)")
     if t in _FP_OPS and sew not in FP_SEWS:
         raise ValueError(
             f"{name} illegal at SEW={sew} (no FP8 format: float ops need "
@@ -551,6 +782,15 @@ def check_insn(ins, sew: int, lmul=1):
             raise ValueError(
                 f"VFNCVT: destination v{ins.vd} overlaps wide source "
                 f"v{ins.vs} outside the lowest-numbered position")
+    if (getattr(ins, "vm", 1) == 0 or t is VMERGE) \
+            and t not in _MASK_WRITERS and t not in _REDUCTIONS:
+        mask_grp = (MASK_REG, span)
+        for base, sp in writes:
+            if _overlaps((base, sp), mask_grp):
+                raise ValueError(
+                    f"{name}: masked destination v{base} overlaps the v0 "
+                    f"mask group (RVV 1.0 v0-overlap rule: only mask "
+                    f"writers and reduction scalars may)")
 
 
 def validate_program(program):
@@ -671,7 +911,15 @@ def imatmul_program(n: int, a_addr: int, b_addr: int, c_addr: int,
 
 
 def slide_reduce_program(vs: int, vl: int, sd: int = 0):
-    """O(log n) sum-reduction via slides + adds (§III-C: no native vred)."""
+    """O(log n) sum-reduction via slides + adds (§III-C: no native vred).
+
+    Retained as the historical workaround that the native reduction class
+    (``VREDSUM`` et al.) retires — the engine demo compares the two
+    spellings' scoreboard cycles. Requires power-of-two ``vl``: VSLIDE is
+    tail-undisturbed, so slid-in body positions keep stale values, and
+    only at power-of-two ``vl`` does the add tree rooted at element 0
+    never read one (the j-th partial at round k sits at j <= vl - 2^k).
+    """
     prog = []
     shift = 1
     tmp = (vs + 1) % NUM_VREGS
@@ -681,3 +929,32 @@ def slide_reduce_program(vs: int, vl: int, sd: int = 0):
         shift *= 2
     prog.append(VEXT(sd, vs, 0))
     return prog
+
+
+def argmax_program(vs: int, iota_addr: int, sd: int = 0,
+                   huge_sreg: int = 1, t0: int = 8, t1: int = 12,
+                   fp: bool = True):
+    """First-index argmax of group ``vs`` via masks + reductions.
+
+    The §III-C retirement demo: VREDMAX finds the max, a compare marks
+    every tied element in ``v0``, VMERGE swaps inactive *indices* for a
+    huge sentinel, and VREDMIN picks the lowest tied index — numpy's
+    argmax tie rule — landing it in scalar register ``sd``.
+
+    The caller stages the iota ``0, 1, .., vl-1`` at ``iota_addr`` and a
+    sentinel ``>= vl`` in scalar register ``huge_sreg``. ``t0``/``t1``
+    are scratch groups (must not be ``v0`` or overlap ``vs``); ``fp``
+    selects VMFEQ vs VMSEQ for the tie compare.
+    """
+    cmp = VMFEQ if fp else VMSEQ
+    return [
+        VREDMAX(t0, vs),           # t0[0] <- max of the body
+        VEXT(sd, t0, 0),
+        VINS(t0, sd),              # broadcast the max
+        cmp(MASK_REG, vs, t0),     # v0 <- (vs == max): the tie mask
+        VLD(t1, iota_addr),        # element indices
+        VINS(t0, huge_sreg),       # broadcast the sentinel
+        VMERGE(t1, t1, t0),        # tied -> index, others -> sentinel
+        VREDMIN(t0, t1),
+        VEXT(sd, t0, 0),           # sd <- first tied index
+    ]

@@ -42,6 +42,8 @@ CONV_SHORT_PEN = 0.5  # cycles/vmadd when a vector spans < 8 banks
 STRIP_SETVL = 2.0  # cycles: vsetvl/dispatch serialization per extra strip
                    # (the rest of the loop body issues under the previous
                    # strip's memory time — chaining hides it)
+RED_HOP = 2.0      # cycles per inter-lane reduction-tree hop (one SLDU
+                   # ring stage per halving of the active lane set)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -187,6 +189,47 @@ def daxpy_perf(cfg: AraConfig, n: int, ew_bits: int = 64,
                lmul=1) -> KernelPerf:
     return KernelPerf("daxpy", daxpy_cycles(cfg, n, ew_bits, lmul), 2.0 * n,
                       cfg.lanes, ew_bits, lmul)
+
+
+# ---------------------------------------------------------------------------
+# REDUCTION  (s <- fold(X), length n — the native vred class, §III-C retired)
+# ---------------------------------------------------------------------------
+
+
+def reduction_cycles(cfg: AraConfig, n: int, ew_bits: int = 64,
+                     lmul=1) -> float:
+    """Strip-mined VLD + vred loop: per strip, the load streams ew/8-byte
+    elements over the memory port, then the SLDU folds e = vl/lanes
+    local elements at the datapath's 64/ew rate and walks the inter-lane
+    binary tree — ``RED_HOP * ceil(log2(lanes))`` cycles, the reduction's
+    irreducible serial tail (why wider machines win less here than on
+    matmul: the tree term GROWS with lanes). Extra strips pay the vsetvl
+    serialization like daxpy's; the accumulate-into-scalar dependency
+    adds one DRAIN per strip boundary (the fold result is needed before
+    the next strip's fold can retire).
+    """
+    lanes = cfg.lanes
+    ways = 64 // ew_bits
+    ebytes = ew_bits / 8.0
+    vlmax = cfg.vlmax(ew_bits, lmul)
+    hops = math.ceil(math.log2(lanes)) if lanes > 1 else 0
+    cycles = float(cfg.config_overhead_cycles)
+    c = 0
+    while c < n:
+        vl = min(n - c, vlmax)
+        e = vl / lanes
+        cycles += ebytes * vl / cfg.mem_bytes_per_cycle + L_MEM
+        cycles += e / ways + RED_HOP * hops
+        if c:
+            cycles += STRIP_SETVL + DRAIN
+        c += vl
+    return cycles
+
+
+def reduction_perf(cfg: AraConfig, n: int, ew_bits: int = 64,
+                   lmul=1) -> KernelPerf:
+    return KernelPerf("reduction", reduction_cycles(cfg, n, ew_bits, lmul),
+                      float(n), cfg.lanes, ew_bits, lmul)
 
 
 # ---------------------------------------------------------------------------

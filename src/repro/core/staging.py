@@ -57,7 +57,10 @@ NF_MAX = max(isa.LMULS)          # nf * lmul <= 8 caps fields at 8
 OPS = ("nop", "vld", "vlds", "vgather", "vlseg", "vst", "vsseg", "vsuxei",
        "vfma", "vfma_vs", "vfadd", "vfmul", "vfwmul", "vfwma", "vfncvt",
        "vadd", "vins", "vext", "vslide", "ldscalar",
-       "vsub", "vmul", "vsaddu", "vsadd", "vssub", "vsmul")
+       "vsub", "vmul", "vsaddu", "vsadd", "vssub", "vsmul",
+       "vmseq", "vmsne", "vmslt", "vmsle", "vmfeq", "vmflt",
+       "vmand", "vmor", "vmxor", "vmerge",
+       "vredsum", "vredmax", "vredmin", "vfwredsum")
 OP_ID = {name: i for i, name in enumerate(OPS)}
 
 # Instruction-table columns (all int32):
@@ -69,10 +72,12 @@ OP_ID = {name: i for i, name in enumerate(OPS)}
 #   vl    resolved vector length     vpr  per-register capacity at sew
 #   lmul  registers per group (group_span: 1 for fractional LMUL)
 #   sewi/wsewi  SEWS index of sew / 2*sew
+#   vm    RVV mask bit: 1 unmasked (default), 0 masked by v0 — one more
+#         int32 data column, so masking never perturbs the signature
 FIELDS = ("op", "rd", "ra", "rb", "sd", "imm", "aux",
-          "vl", "vpr", "lmul", "sewi", "wsewi")
+          "vl", "vpr", "lmul", "sewi", "wsewi", "vm")
 
-_NOP_DEFAULTS = {"vpr": 1, "lmul": 1}     # keep // and % well-defined
+_NOP_DEFAULTS = {"vpr": 1, "lmul": 1, "vm": 1}   # keep // and % well-defined
 
 _SEW_DTYPE = {bits: jnp.dtype(name) for bits, name in SEW_TO_DTYPE.items()}
 
@@ -86,6 +91,12 @@ _OP_FOR = {
     isa.VSADDU: "vsaddu", isa.VSADD: "vsadd", isa.VSSUB: "vssub",
     isa.VSMUL: "vsmul", isa.VINS: "vins", isa.VEXT: "vext",
     isa.VSLIDE: "vslide", isa.LDSCALAR: "ldscalar",
+    isa.VMSEQ: "vmseq", isa.VMSNE: "vmsne", isa.VMSLT: "vmslt",
+    isa.VMSLE: "vmsle", isa.VMFEQ: "vmfeq", isa.VMFLT: "vmflt",
+    isa.VMAND: "vmand", isa.VMOR: "vmor", isa.VMXOR: "vmxor",
+    isa.VMERGE: "vmerge", isa.VREDSUM: "vredsum",
+    isa.VREDMAX: "vredmax", isa.VREDMIN: "vredmin",
+    isa.VFWREDSUM: "vfwredsum",
 }
 
 
@@ -121,7 +132,7 @@ def resolve_vtype(program, vlmax64: int):
         isa.check_insn(ins, sew, lmul)
         if type(ins) is isa.VSETVL:
             sew, lmul = ins.sew, ins.lmul
-            vl = min(ins.vl, isa.grouped_vlmax(vlmax64, sew, lmul))
+            vl = isa.vsetvl_grant(ins.vl, vlmax64, sew, lmul)
         out.append((ins, vl, sew, lmul))
     return out
 
@@ -139,7 +150,8 @@ def encode_program(program, vlmax64: int):
         r = dict.fromkeys(FIELDS, 0)
         r.update(op=OP_ID[name], vl=vl, vpr=vlmax64 * (64 // sew),
                  lmul=isa.group_span(lmul), sewi=isa.SEWS.index(sew),
-                 wsewi=isa.SEWS.index(2 * sew) if 2 * sew in isa.SEWS else 0)
+                 wsewi=isa.SEWS.index(2 * sew) if 2 * sew in isa.SEWS else 0,
+                 vm=getattr(ins, "vm", 1))
         if t in (isa.VLD, isa.VLDS, isa.VGATHER, isa.VLUXEI, isa.VLSEG):
             r["rd"], r["imm"] = ins.vd, ins.addr
             if t is isa.VLDS:
@@ -170,6 +182,11 @@ def encode_program(program, vlmax64: int):
             r["rd"], r["ra"], r["aux"] = ins.vd, ins.vs, ins.amount
         elif t is isa.LDSCALAR:
             r["sd"], r["imm"] = ins.sd, ins.addr
+        elif t in (isa.VMSEQ, isa.VMSNE, isa.VMSLT, isa.VMSLE, isa.VMFEQ,
+                   isa.VMFLT, isa.VMAND, isa.VMOR, isa.VMXOR, isa.VMERGE):
+            r["rd"], r["ra"], r["rb"] = ins.vd, ins.va, ins.vb
+        elif t in isa._REDUCTIONS:
+            r["rd"], r["ra"] = ins.vd, ins.vs
         rows.append(r)
     return rows
 
@@ -386,6 +403,20 @@ def build_runner(sig: Signature, stats: CacheStats, mesh=None,
     # deterministic across backends (NaN pins to 0 for the same reason)
     i32max = (2 ** 31 - 1) if (int_storage or storage.itemsize >= 8) \
         else 2 ** 31 - 128
+    # reduction tree: static pow2 fold window and per-sewi max/min
+    # identities (float formats use +-inf; the SEW=8 / fixed-point
+    # integer lanes use the type extremes so identities survive qdyn)
+    RED_P = 1 << max(gwin - 1, 0).bit_length()
+    if int_storage:
+        MAX_IDENT = jnp.array(
+            [-(1 << (min(b, 32) - 1)) for b in isa.SEWS], storage)
+        MIN_IDENT = jnp.array(
+            [(1 << (min(b, 32) - 1)) - 1 for b in isa.SEWS], storage)
+    else:
+        MAX_IDENT = jnp.array(
+            [-jnp.inf, -jnp.inf, -jnp.inf, -128.0], storage)
+        MIN_IDENT = jnp.array(
+            [jnp.inf, jnp.inf, jnp.inf, 127.0], storage)
 
     def to_int(x):
         """Storage value -> int32 two's-complement canonical form."""
@@ -439,6 +470,12 @@ def build_runner(sig: Signature, stats: CacheStats, mesh=None,
                 r = jnp.where(ok, base + e // spr, nregs)
                 return v.at[r, e % spr].set(vals, mode="drop")
 
+            # the active body: mask-undisturbed predication off the v0
+            # group (element active iff nonzero); vm=1 degenerates to the
+            # plain body so unmasked rows cost one select, not a branch
+            act = jnp.where(row["vm"] == 0,
+                            mask & (R(v, isa.MASK_REG) != 0), mask)
+
             def mstore(mem, gidx, vals, ok):
                 # VLSU collect: scatter the valid contributions, count
                 # writers per address, reconcile across lanes via psum
@@ -453,20 +490,23 @@ def build_runner(sig: Signature, stats: CacheStats, mesh=None,
                 return v, mem, s
 
             def op_vld(v, mem, s):
-                idx = jnp.where(mask, row["imm"] + ids, 0)
-                return W(v, row["rd"], qdyn(mem[idx], row["sewi"])), mem, s
+                idx = jnp.where(act, row["imm"] + ids, 0)
+                return (W(v, row["rd"], qdyn(mem[idx], row["sewi"]), act),
+                        mem, s)
 
             def op_vlds(v, mem, s):
-                idx = jnp.where(mask, row["imm"] + row["aux"] * ids, 0)
-                return W(v, row["rd"], qdyn(mem[idx], row["sewi"])), mem, s
+                idx = jnp.where(act, row["imm"] + row["aux"] * ids, 0)
+                return (W(v, row["rd"], qdyn(mem[idx], row["sewi"]), act),
+                        mem, s)
 
             def op_vgather(v, mem, s):
                 # OOB indexed loads are UB in HW; the model pins them to
                 # the *true* memory edges (size is data, not padding)
                 iv = R(v, row["ra"]).astype(jnp.int32)
-                gi = jnp.clip(jnp.where(mask, row["imm"] + iv, 0),
+                gi = jnp.clip(jnp.where(act, row["imm"] + iv, 0),
                               0, size - 1)
-                return W(v, row["rd"], qdyn(mem[gi], row["sewi"])), mem, s
+                return (W(v, row["rd"], qdyn(mem[gi], row["sewi"]), act),
+                        mem, s)
 
             def op_vlseg(v, mem, s):
                 nf = row["aux"]
@@ -480,7 +520,7 @@ def build_runner(sig: Signature, stats: CacheStats, mesh=None,
             def op_vst(v, mem, s):
                 gi = row["imm"] + ids
                 return v, mstore(mem, gi, R(v, row["rd"]),
-                                 mask & (gi < size)), s
+                                 act & (gi < size)), s
 
             def op_vsseg(v, mem, s):
                 nf = row["aux"]
@@ -495,12 +535,12 @@ def build_runner(sig: Signature, stats: CacheStats, mesh=None,
                 # highest element wins: find each address's winning
                 # element id globally (pmax), then contribute only it
                 iv = R(v, row["ra"]).astype(jnp.int32)
-                gi = jnp.clip(jnp.where(mask, row["imm"] + iv, 0),
+                gi = jnp.clip(jnp.where(act, row["imm"] + iv, 0),
                               0, size - 1)
-                eid = jnp.where(mask, ids, -1).astype(jnp.int32)
+                eid = jnp.where(act, ids, -1).astype(jnp.int32)
                 order = allmax(
                     jnp.full(mem.shape, -1, jnp.int32).at[gi].max(eid))
-                win = mask & (order[gi] == ids)
+                win = act & (order[gi] == ids)
                 contrib = allsum(
                     jnp.zeros_like(mem).at[jnp.where(win, gi, 0)].add(
                         jnp.where(win, R(v, row["rd"]), 0).astype(storage)))
@@ -508,31 +548,31 @@ def build_runner(sig: Signature, stats: CacheStats, mesh=None,
 
             def op_vfma(v, mem, s):
                 res = R(v, row["ra"]) * R(v, row["rb"]) + R(v, row["rd"])
-                return W(v, row["rd"], qdyn(res, row["sewi"])), mem, s
+                return W(v, row["rd"], qdyn(res, row["sewi"]), act), mem, s
 
             def op_vfma_vs(v, mem, s):
                 res = s[row["sd"]] * R(v, row["rb"]) + R(v, row["rd"])
-                return W(v, row["rd"], qdyn(res, row["sewi"])), mem, s
+                return W(v, row["rd"], qdyn(res, row["sewi"]), act), mem, s
 
             def op_vfadd(v, mem, s):
                 res = R(v, row["ra"]) + R(v, row["rb"])
-                return W(v, row["rd"], qdyn(res, row["sewi"])), mem, s
+                return W(v, row["rd"], qdyn(res, row["sewi"]), act), mem, s
 
             def op_vfmul(v, mem, s):
                 res = R(v, row["ra"]) * R(v, row["rb"])
-                return W(v, row["rd"], qdyn(res, row["sewi"])), mem, s
+                return W(v, row["rd"], qdyn(res, row["sewi"]), act), mem, s
 
             def op_vfwmul(v, mem, s):
                 res = R(v, row["ra"]) * R(v, row["rb"])
-                return W(v, row["rd"], qdyn(res, row["wsewi"])), mem, s
+                return W(v, row["rd"], qdyn(res, row["wsewi"]), act), mem, s
 
             def op_vfwma(v, mem, s):
                 res = R(v, row["ra"]) * R(v, row["rb"]) + R(v, row["rd"])
-                return W(v, row["rd"], qdyn(res, row["wsewi"])), mem, s
+                return W(v, row["rd"], qdyn(res, row["wsewi"]), act), mem, s
 
             def op_vfncvt(v, mem, s):
                 return (W(v, row["rd"], qdyn(R(v, row["ra"]),
-                                             row["sewi"])), mem, s)
+                                             row["sewi"]), act), mem, s)
 
             def int_op(kind, sticky):
                 # integer/fixed-point branch: int32 view in, wrapped or
@@ -546,10 +586,10 @@ def build_runner(sig: Signature, stats: CacheStats, mesh=None,
                         row["sewi"],
                         [lambda x, y, w=w: int_arith(kind, x, y, w)
                          for w in isa.SEWS], a, b)
-                    v = W(v, row["rd"], res.astype(storage))
+                    v = W(v, row["rd"], res.astype(storage), act)
                     if sticky:
                         flag = allmax(jnp.max(
-                            jnp.where(mask & sat, 1, 0)))
+                            jnp.where(act & sat, 1, 0)))
                         s = s.at[isa.VXSAT_SREG].max(flag.astype(storage))
                     return v, mem, s
                 return op
@@ -565,16 +605,89 @@ def build_runner(sig: Signature, stats: CacheStats, mesh=None,
 
             def op_vslide(v, mem, s):
                 # SLDU: materialize the group globally (psum over lanes'
-                # disjoint contributions — exact), then gather i+amount
+                # disjoint contributions — exact), then gather i+amount.
+                # Tail-undisturbed (Ara2/RVV 1.0): body elements whose
+                # source would come from at-or-past vl are NOT written —
+                # they keep their old values, like every tail element
                 src = jnp.where(mask, R(v, row["ra"]), 0)
                 vec = allsum(jnp.zeros((gwin,), storage).at[
                     jnp.where(mask, ids, gwin)].set(src, mode="drop"))
                 tgt = jnp.clip(ids + row["aux"], 0, gwin - 1)
-                vals = jnp.where(ids + row["aux"] < vl, vec[tgt], 0)
-                return W(v, row["rd"], vals), mem, s
+                return (W(v, row["rd"], vec[tgt],
+                          mask & (ids + row["aux"] < vl)), mem, s)
 
             def op_ldscalar(v, mem, s):
                 return v, mem, s.at[row["sd"]].set(mem[row["imm"]])
+
+            def cmp_op(kind):
+                # mask-generating compares: exact 0/1 in mask layout,
+                # mask-undisturbed where the compare is itself masked
+                def op(v, mem, s):
+                    if kind in ("vmfeq", "vmflt"):
+                        a, b = R(v, row["ra"]), R(v, row["rb"])
+                    else:
+                        a = to_int(R(v, row["ra"]))
+                        b = to_int(R(v, row["rb"]))
+                    res = {"vmseq": lambda: a == b,
+                           "vmsne": lambda: a != b,
+                           "vmslt": lambda: a < b,
+                           "vmsle": lambda: a <= b,
+                           "vmfeq": lambda: a == b,
+                           "vmflt": lambda: a < b}[kind]()
+                    return W(v, row["rd"], res.astype(storage), act), mem, s
+                return op
+
+            def logical_op(kind):
+                def op(v, mem, s):
+                    a = R(v, row["ra"]) != 0    # activeness view
+                    b = R(v, row["rb"]) != 0
+                    res = {"vmand": a & b, "vmor": a | b,
+                           "vmxor": a ^ b}[kind]
+                    return W(v, row["rd"], res.astype(storage)), mem, s
+                return op
+
+            def op_vmerge(v, mem, s):
+                sel = R(v, isa.MASK_REG) != 0
+                vals = jnp.where(sel, R(v, row["ra"]), R(v, row["rb"]))
+                return W(v, row["rd"], vals), mem, s
+
+            def red_op(kind, wide=False):
+                # classless tree reduction: materialize the ACTIVE body
+                # globally (disjoint scatters + psum, exact), pad to the
+                # static pow2 window with the op identity, fold halves.
+                # The fold is identity-invariant to the pow2 padding, so
+                # the oracle's next_pow2(vl) tree lands bit-identically.
+                def op(v, mem, s):
+                    if kind == "vredmax":
+                        ident = MAX_IDENT[row["sewi"]]
+                    elif kind == "vredmin":
+                        ident = MIN_IDENT[row["sewi"]]
+                    else:
+                        ident = jnp.zeros((), storage)
+                    tgt = jnp.where(act, ids, RED_P)
+                    vec = allsum(jnp.zeros((RED_P,), storage).at[tgt].set(
+                        R(v, row["ra"]), mode="drop"))
+                    cnt = allsum(jnp.zeros((RED_P,), jnp.int32).at[tgt].set(
+                        1, mode="drop"))
+                    vec = jnp.where(cnt > 0, vec, ident)
+                    n = RED_P
+                    while n > 1:
+                        n //= 2
+                        lo, hi = vec[:n], vec[n:2 * n]
+                        if kind == "vredmax":
+                            vec = jnp.maximum(lo, hi)
+                        elif kind == "vredmin":
+                            vec = jnp.minimum(lo, hi)
+                        else:
+                            vec = lo + hi
+                    res = qdyn(vec[0], row["wsewi"] if wide
+                               else row["sewi"])
+                    # scalar destination: element 0 only, nothing at vl=0
+                    ok = (ids == 0) & (vl > 0)
+                    return (W(v, row["rd"],
+                              jnp.broadcast_to(res, (window,)), ok),
+                            mem, s)
+                return op
 
             named = {k: int_op(*v) for k, v in INT_OPS.items()}
             branches = [op_nop, op_vld, op_vlds, op_vgather, op_vlseg,
@@ -583,7 +696,13 @@ def build_runner(sig: Signature, stats: CacheStats, mesh=None,
                         op_vfncvt, named["vadd"], op_vins, op_vext,
                         op_vslide, op_ldscalar, named["vsub"],
                         named["vmul"], named["vsaddu"], named["vsadd"],
-                        named["vssub"], named["vsmul"]]
+                        named["vssub"], named["vsmul"],
+                        cmp_op("vmseq"), cmp_op("vmsne"), cmp_op("vmslt"),
+                        cmp_op("vmsle"), cmp_op("vmfeq"), cmp_op("vmflt"),
+                        logical_op("vmand"), logical_op("vmor"),
+                        logical_op("vmxor"), op_vmerge,
+                        red_op("vredsum"), red_op("vredmax"),
+                        red_op("vredmin"), red_op("vfwredsum", wide=True)]
             assert len(branches) == len(OPS)
             return jax.lax.switch(row["op"], branches, v, mem, s), None
 

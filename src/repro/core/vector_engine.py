@@ -58,6 +58,15 @@ memory edges (OOB is UB in HW; the model pins it); scatter collisions
 resolve highest-element-index-wins in both engines, so the differential
 contract stays exact even for colliding or clamped index vectors.
 
+Masking and reductions (RVV 1.0, docs/isa.md): a ``vm=0`` op executes
+only where the ``v0`` group is nonzero, mask-undisturbed — one more
+int32 SoA column, so predication never perturbs the compile-once
+signature. Compares/logicals/VMERGE occupy the scoreboard's dedicated
+mask unit; reductions fold on the SLDU with an explicit inter-lane tree
+term (``RED_HOP`` cycles per log2(lanes) hop), and their results are
+bit-reproducible across lane counts by construction (fixed fold tree,
+identity padding).
+
 ``simulate_timing`` is an event-driven scoreboard (issue interval, per-unit
 occupancy, chaining lag) giving an instruction-accurate cycle estimate that
 cross-validates the closed-form core/perfmodel.py. It shares the engines'
@@ -81,7 +90,7 @@ import numpy as np
 
 from repro.configs.ara import AraConfig
 from repro.core import isa, staging
-from repro.core.perfmodel import C_MEM_LANE, L_MEM
+from repro.core.perfmodel import C_MEM_LANE, L_MEM, RED_HOP
 
 CHAIN_LAG = 4.0   # cycles: consumer starts this far behind producer (chaining)
 
@@ -242,6 +251,10 @@ ISSUE_COST = {  # Ariane dispatch slots per instruction (Appendix A)
     isa.VSUB: 1, isa.VMUL: 1, isa.VSADDU: 1, isa.VSADD: 1, isa.VSSUB: 1,
     isa.VSMUL: 1, isa.VFWMUL: 1, isa.VFWMA: 1, isa.VFNCVT: 1,
     isa.VINS: 1, isa.VEXT: 1, isa.VSLIDE: 1, isa.LDSCALAR: 3,
+    isa.VMSEQ: 1, isa.VMSNE: 1, isa.VMSLT: 1, isa.VMSLE: 1,
+    isa.VMFEQ: 1, isa.VMFLT: 1, isa.VMAND: 1, isa.VMOR: 1, isa.VMXOR: 1,
+    isa.VMERGE: 1, isa.VREDSUM: 1, isa.VREDMAX: 1, isa.VREDMIN: 1,
+    isa.VFWREDSUM: 1,
 }
 
 _WIDENING = (isa.VFWMUL, isa.VFWMA)
@@ -253,6 +266,10 @@ _INT_ALU = (isa.VADD, isa.VSUB, isa.VMUL, isa.VSADDU, isa.VSADD,
 _ELEMENT_GRANULAR = (isa.VLDS, isa.VGATHER, isa.VLUXEI, isa.VSUXEI)
 _MEM_OPS = (isa.VLD, isa.VLDS, isa.VGATHER, isa.VST,
             isa.VLSEG, isa.VSSEG, isa.VLUXEI, isa.VSUXEI)
+# the Mask Unit (Ara2's MASKU): compares, mask logicals and VMERGE run at
+# the ALU's subdivided rate but on their own port, so predicated loops
+# overlap mask generation with the predicated work itself
+_MASK_UNIT = isa._MASK_WRITERS + (isa.VMERGE,)
 
 
 def simulate_timing(program, cfg: AraConfig,
@@ -262,7 +279,7 @@ def simulate_timing(program, cfg: AraConfig,
     bw = cfg.mem_bytes_per_cycle
     issue_t = 0.0
     unit_free = {"fpu": 0.0, "alu": 0.0, "sldu": 0.0, "vlsu": 0.0,
-                 "scalar": 0.0}
+                 "scalar": 0.0, "mask": 0.0}
     busy = {k: 0.0 for k in unit_free}
     reg_start = {}          # vreg -> exec start (chaining reference)
     reg_end = {}
@@ -302,6 +319,19 @@ def simulate_timing(program, cfg: AraConfig,
         elif t in _INT_ALU:
             unit = "alu"
             occ = e / ways
+            lat = occ + CHAIN_LAG
+        elif t in _MASK_UNIT:
+            unit = "mask"
+            occ = e / ways
+            lat = occ + CHAIN_LAG
+        elif t in isa._REDUCTIONS:
+            # local fold at the datapath rate + the inter-lane binary
+            # tree: RED_HOP cycles per halving of the lane set — the
+            # serial tail that grows with lanes (perfmodel.reduction_cycles
+            # charges the identical term; golden-pinned)
+            hops = int(np.ceil(np.log2(lanes))) if lanes > 1 else 0
+            unit = "sldu"
+            occ = e / ways + RED_HOP * hops
             lat = occ + CHAIN_LAG
         elif t in (isa.VINS, isa.VEXT, isa.VSLIDE):
             unit, occ = "sldu", e / ways + (lanes / 8.0)

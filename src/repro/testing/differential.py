@@ -55,21 +55,29 @@ SEW_NP = {64: np.float64, 32: np.float32, 16: np.float16, 8: np.int8}
 # SEW=8 cells are pure-integer and exact in any storage
 TOL = {64: 1e-5, 32: 1e-5, 16: 1e-2, 8: 1e-6}
 
-# oracle/program memory size (elements): 8x the grid's largest VLMAX
-# (SEW=8 x LMUL=8 at VLMAX64=8 -> 512), and CONSTANT across cells so
-# every cell of a sweep pads to the same mem_words — one signature, one
-# XLA compile per engine for the whole grid
-MEM_WORDS = 4096
+# oracle/program memory size (elements): the LOW half is the program's
+# address space, the HIGH half is the register-dump region the generator
+# epilogue stores every work group into at full VLMAX — so TAIL lanes
+# land in compared memory and a tail-policy bug can never hide again.
+# CONSTANT across cells so every cell of a sweep pads to the same
+# mem_words — one signature, one XLA compile per engine for the grid
+MEM_WORDS = 8192
 INT_REGION = 256      # mem[:INT_REGION] holds small ints (index material)
 VLMAX64 = 8           # default per-register 64-bit VLMAX for the grid
 
 FP_POOL = ("vfma", "vfma_vs", "vfadd", "vfmul", "vfwmul", "vfwma",
            "vfncvt")
 INT_POOL = ("vadd", "vsub", "vmul", "vsaddu", "vsadd", "vssub", "vsmul")
+# mask-generating compares split by op class like the arithmetic pools
+INT_CMP_POOL = ("vmseq", "vmsne", "vmslt", "vmsle")
+FP_CMP_POOL = ("vmfeq", "vmflt")
+MASK_POOL = ("vmand", "vmor", "vmxor", "vmerge")
+RED_POOL = ("vredsum", "vredmax", "vredmin", "vfwredsum")
 
-DEFAULT_OPS = FP_POOL + INT_POOL + (
-    "vins", "vld", "vlds", "vgather", "vluxei", "vst", "vsuxei", "vlseg",
-    "vsseg", "vslide", "vext", "ldscalar")
+DEFAULT_OPS = FP_POOL + INT_POOL + INT_CMP_POOL + FP_CMP_POOL \
+    + MASK_POOL + RED_POOL + (
+        "vins", "vld", "vlds", "vgather", "vluxei", "vst", "vsuxei",
+        "vlseg", "vsseg", "vslide", "vext", "ldscalar")
 
 
 # ---------------------------------------------------------------------------
@@ -138,6 +146,54 @@ _INT_INSNS = {isa.VADD: "vadd", isa.VSUB: "vsub", isa.VMUL: "vmul",
               isa.VSSUB: "vssub", isa.VSMUL: "vsmul"}
 _STICKY = ("vsaddu", "vsadd", "vssub", "vsmul")
 
+_INT_CMP_NP = {isa.VMSEQ: np.equal, isa.VMSNE: np.not_equal,
+               isa.VMSLT: np.less, isa.VMSLE: np.less_equal}
+_FP_CMP_NP = {isa.VMFEQ: np.equal, isa.VMFLT: np.less}
+_LOGICAL_NP = {isa.VMAND: np.logical_and, isa.VMOR: np.logical_or,
+               isa.VMXOR: np.logical_xor}
+_RED_KIND = {isa.VREDSUM: "sum", isa.VREDMAX: "max", isa.VREDMIN: "min",
+             isa.VFWREDSUM: "wsum"}
+
+
+def _tree_reduce(kind: str, vals, act, sew: int, storage):
+    """The engines' fixed fold tree, mirrored independently in numpy.
+
+    Active values land in a next-pow2(vl) window padded with the op
+    identity, then halves fold: combine(vec[:n], vec[n:]). The fold is
+    identity-invariant to the pow2 padding width, so this matches the
+    engine's global-window tree bit for bit. Integer storage folds in
+    int64 (mod-2^32 addition is a ring homomorphism, so the engine's
+    int32 node wraps agree after the final quantize); float storage
+    folds in the storage dtype with no per-node rounding, exactly like
+    the staged step. The result is quantized at SEW (2*SEW for the
+    widening sum) by the caller.
+    """
+    int_store = np.issubdtype(np.dtype(storage), np.integer)
+    s = min(sew, 32)
+    if kind in ("sum", "wsum"):
+        ident = 0
+    elif kind == "max":
+        ident = -(1 << (s - 1)) if int_store \
+            else (-128.0 if sew == 8 else -np.inf)
+    else:
+        ident = (1 << (s - 1)) - 1 if int_store \
+            else (127.0 if sew == 8 else np.inf)
+    vl = len(vals)
+    p = 1 << max(vl - 1, 0).bit_length()
+    vec = np.full(p, ident, np.int64 if int_store else storage)
+    vec[:vl][act] = np.asarray(vals)[act]
+    n = p
+    while n > 1:
+        n //= 2
+        lo, hi = vec[:n], vec[n:2 * n]
+        if kind == "max":
+            vec = np.maximum(lo, hi)
+        elif kind == "min":
+            vec = np.minimum(lo, hi)
+        else:
+            vec = lo + hi
+    return vec[0]
+
 
 def numpy_oracle(program, memory, vlmax64: int, sregs: Optional[dict] = None,
                  storage=np.float32):
@@ -164,7 +220,11 @@ def numpy_oracle(program, memory, vlmax64: int, sregs: Optional[dict] = None,
             return np.concatenate(
                 [v[reg + g, :vpr] for g in range(span)])[:vl]
 
-        def W(reg, vals):
+        def W(reg, vals, ok=None):
+            if ok is not None:               # mask-undisturbed write
+                cur = np.array(R(reg), storage)
+                cur[ok] = np.asarray(vals, storage)[ok]
+                vals = cur
             if vl <= vpr:
                 v[reg, :vl] = vals
                 return
@@ -175,64 +235,109 @@ def numpy_oracle(program, memory, vlmax64: int, sregs: Optional[dict] = None,
                 hi = min(vl, lo + vpr)
                 v[reg + g, :hi - lo] = vals[lo:hi]
 
+        def A(vm):
+            """The active body: all of it when unmasked, else where the
+            v0 group is nonzero (the value-model mask layout)."""
+            if vm:
+                return np.ones(vl, bool)
+            return np.asarray(R(isa.MASK_REG)) != 0
+
         if t is isa.VSETVL:
             sew, lmul = ins.sew, ins.lmul
-            vl = min(ins.vl, isa.grouped_vlmax(vlmax64, sew, lmul))
+            vl = isa.vsetvl_grant(ins.vl, vlmax64, sew, lmul)
         elif t is isa.VLD:
-            W(ins.vd, q(mem[ins.addr:ins.addr + vl], sew))
+            W(ins.vd, q(mem[ins.addr:ins.addr + vl], sew), A(ins.vm))
         elif t is isa.VLDS:
             idx = ins.addr + ins.stride * np.arange(vl)
-            W(ins.vd, q(mem[idx], sew))
+            W(ins.vd, q(mem[idx], sew), A(ins.vm))
         elif t in (isa.VGATHER, isa.VLUXEI):
             idx = ins.addr + R(ins.vidx).astype(np.int32)
             idx = np.clip(idx, 0, mem.shape[0] - 1)
-            W(ins.vd, q(mem[idx], sew))
+            W(ins.vd, q(mem[idx], sew), A(ins.vm))
         elif t is isa.VLSEG:
             base = ins.addr + ins.nf * np.arange(vl)
             for f in range(ins.nf):
                 W(ins.vd + f * span, q(mem[base + f], sew))
         elif t is isa.VST:
-            mem[ins.addr:ins.addr + vl] = R(ins.vs)
+            act = A(ins.vm)
+            tgt = mem[ins.addr:ins.addr + vl]
+            tgt[act] = np.asarray(R(ins.vs), storage)[act]
         elif t is isa.VSSEG:
             base = ins.addr + ins.nf * np.arange(vl)
             for f in range(ins.nf):
                 mem[base + f] = R(ins.vs + f * span)
         elif t is isa.VSUXEI:
+            act = A(ins.vm)
             idx = ins.addr + R(ins.vidx).astype(np.int32)
             idx = np.clip(idx, 0, mem.shape[0] - 1)
             vals = np.asarray(R(ins.vs), storage)
             for i in range(vl):              # element order: last one wins
-                mem[idx[i]] = vals[i]
+                if act[i]:
+                    mem[idx[i]] = vals[i]
         elif t is isa.VFMA:
-            W(ins.vd, q(R(ins.va) * R(ins.vb) + R(ins.vd), sew))
+            W(ins.vd, q(R(ins.va) * R(ins.vb) + R(ins.vd), sew),
+              A(ins.vm))
         elif t is isa.VFMA_VS:
             W(ins.vd, q(storage(s[ins.vs_scalar]) * R(ins.vb) + R(ins.vd),
-                        sew))
+                        sew), A(ins.vm))
         elif t is isa.VFADD:
-            W(ins.vd, q(R(ins.va) + R(ins.vb), sew))
+            W(ins.vd, q(R(ins.va) + R(ins.vb), sew), A(ins.vm))
         elif t is isa.VFMUL:
-            W(ins.vd, q(R(ins.va) * R(ins.vb), sew))
+            W(ins.vd, q(R(ins.va) * R(ins.vb), sew), A(ins.vm))
         elif t is isa.VFWMUL:
-            W(ins.vd, q(R(ins.va) * R(ins.vb), 2 * sew))
+            W(ins.vd, q(R(ins.va) * R(ins.vb), 2 * sew), A(ins.vm))
         elif t is isa.VFWMA:
-            W(ins.vd, q(R(ins.va) * R(ins.vb) + R(ins.vd), 2 * sew))
+            W(ins.vd, q(R(ins.va) * R(ins.vb) + R(ins.vd), 2 * sew),
+              A(ins.vm))
         elif t is isa.VFNCVT:
-            W(ins.vd, q(R(ins.vs), sew))
+            W(ins.vd, q(R(ins.vs), sew), A(ins.vm))
         elif t in _INT_INSNS:
             kind = _INT_INSNS[t]
+            act = A(ins.vm)
             r, sat = _int_bin_np(kind, to_int_np(R(ins.va), storage),
                                  to_int_np(R(ins.vb), storage), sew)
-            W(ins.vd, np.asarray(r).astype(storage))
-            if kind in _STICKY and bool(np.any(sat)):
+            W(ins.vd, np.asarray(r).astype(storage), act)
+            if kind in _STICKY and bool(np.any(sat & act)):
                 s[isa.VXSAT_SREG] = max(float(s[isa.VXSAT_SREG]), 1.0)
+        elif t in _INT_CMP_NP:
+            res = _INT_CMP_NP[t](to_int_np(R(ins.va), storage),
+                                 to_int_np(R(ins.vb), storage))
+            W(ins.vd, res.astype(storage), A(ins.vm))
+        elif t in _FP_CMP_NP:
+            res = _FP_CMP_NP[t](np.asarray(R(ins.va)),
+                                np.asarray(R(ins.vb)))
+            W(ins.vd, res.astype(storage), A(ins.vm))
+        elif t in _LOGICAL_NP:
+            res = _LOGICAL_NP[t](np.asarray(R(ins.va)) != 0,
+                                 np.asarray(R(ins.vb)) != 0)
+            W(ins.vd, res.astype(storage))
+        elif t is isa.VMERGE:
+            sel = np.asarray(R(isa.MASK_REG)) != 0
+            W(ins.vd, np.where(sel, np.asarray(R(ins.va), storage),
+                               np.asarray(R(ins.vb), storage)))
+        elif t in _RED_KIND:
+            # scalar-dest fold: element 0 of ONE register, tail
+            # undisturbed, nothing at all when vl == 0
+            if vl > 0:
+                kind = _RED_KIND[t]
+                res = _tree_reduce(kind, R(ins.vs), A(ins.vm), sew,
+                                   storage)
+                v[ins.vd, 0] = quantize(
+                    res, 2 * sew if kind == "wsum" else sew, storage)
         elif t is isa.VINS:
             W(ins.vd, q(np.full(vl, s[ins.scalar], storage), sew))
         elif t is isa.VEXT:
-            s[ins.sd] = R(ins.vs)[ins.idx]
+            # normative: an extract at-or-past vl (vl=0 included) reads 0
+            s[ins.sd] = R(ins.vs)[ins.idx] if ins.idx < vl \
+                else storage(0)
         elif t is isa.VSLIDE:
-            src = R(ins.vs)
-            out = np.zeros(vl, storage)
-            out[:vl - ins.amount] = src[ins.amount:vl]
+            # tail-undisturbed: only elements whose source sits below vl
+            # are written; the rest of the body AND the tail keep their
+            # old register values (Ara2/RVV 1.0 — the PR-6 bugfix)
+            src = np.asarray(R(ins.vs), storage)
+            out = np.array(R(ins.vd), storage)
+            k = max(vl - ins.amount, 0)
+            out[:k] = src[ins.amount:ins.amount + k]
             W(ins.vd, out)
         elif t is isa.LDSCALAR:
             s[ins.sd] = mem[ins.addr]
@@ -253,25 +358,48 @@ def random_program(r: np.random.RandomState, sew: int = 64, lmul=1,
     """Build (program, memory, sregs) legal at the given vtype.
 
     Register allocation is span-aligned: work groups are the aligned
-    bases except the last, which holds the index vector for gathers/
-    scatters (fractional LMUL has span 1, so every register is a base).
-    Widening picks an EMUL-span-aligned destination whose reserved span
-    avoids both sources; segment ops bound their field span by the file.
-    The op pool respects the vtype's op classes: float ops drop out at
-    SEW=8 (no FP8) and the integer/fixed-point class drops out at SEW=64,
-    so SEW=8 cells are pure-integer — every register value is an exact
-    small int and the differential contract is bitwise there. SEW=8
-    memory is filled with ints for the same reason.
+    bases except the first (reserved for the v0 mask group) and the
+    last, which holds the index vector for gathers/scatters (fractional
+    LMUL has span 1, so every register is a base). Widening picks an
+    EMUL-span-aligned destination whose reserved span avoids both
+    sources; segment ops bound their field span by the file. The op pool
+    respects the vtype's op classes: float ops and compares drop out at
+    SEW=8 (no FP8), the integer/fixed-point class and compares drop out
+    at SEW=64, and the widening float reduction needs a wider FP type —
+    so SEW=8 cells are pure-integer and bitwise. SEW=8 memory is filled
+    with ints for the same reason.
+
+    Masking: v0 is seeded from a memory pattern (random 0/1, or the
+    all-ones/all-zeros edges), maskable ops draw vm=0 half the time, and
+    compare/logical destinations often target v0 so the live mask
+    evolves mid-program. The leading VSETVL carries the raw AVL REQUEST
+    (including the vl=0 and over-ask edges); executors must apply
+    ``isa.vsetvl_grant``. A dump epilogue re-vsetvls to the full vlmax
+    and stores the v0 + work groups into the high half of memory so
+    register TAILS (mask/tail-undisturbed leftovers) are part of the
+    bit-exact memory comparison.
     """
     isa.check_vtype(sew, lmul)
     vlmax = isa.grouped_vlmax(vlmax64, sew, lmul)
     span = isa.group_span(lmul)
     wspan = isa.group_span(2 * Fraction(lmul))
-    # bias toward multi-register vl so grouping is actually exercised
-    vl = int(r.randint(max(2, vlmax // 2), vlmax + 1))
-    # memory scales with the grid point: room for nf<=4 segment fields
-    # plus slack, whatever vlmax64 the caller picked
-    mem_words = max(mem_words or MEM_WORDS, 8 * vlmax)
+    # AVL request edges: the program carries the REQUEST in its leading
+    # VSETVL (vl=0 no-op that still grants, over-ask that caps at VLMAX)
+    # and every engine must apply the same grant rule
+    roll = r.rand()
+    if roll < 0.06:
+        req = 0
+    elif roll < 0.12:
+        req = vlmax + int(r.randint(1, 64))
+    else:
+        # bias toward multi-register vl so grouping is actually exercised
+        req = int(r.randint(max(2, vlmax // 2), vlmax + 1))
+    vl = isa.vsetvl_grant(req, vlmax64, sew, lmul)
+    # memory: low half is program address space, high half is the
+    # register-dump region the epilogue stores groups into (so register
+    # TAILS are visible to the memory comparison, bit-exactly)
+    mem_words = max(mem_words or MEM_WORDS, 16 * vlmax)
+    dump_base = mem_words // 2
     int_region = min(INT_REGION, mem_words // 4)
     if sew == 8:
         mem = r.randint(-100, 100, mem_words).astype(float)
@@ -282,11 +410,24 @@ def random_program(r: np.random.RandomState, sew: int = 64, lmul=1,
 
     bases = list(range(0, isa.NUM_VREGS, span))
     idx_grp = bases[-1]                       # gather/scatter index vector
-    work = bases[:-1][:8]
-    wide_bases = [b for b in range(0, isa.NUM_VREGS - wspan + 1, wspan)]
+    work = bases[1:-1][:8]                    # bases[0] is the v0 group
+    wide_bases = [b for b in range(wspan, isa.NUM_VREGS - wspan + 1,
+                                   wspan)]
 
     def reg():
         return work[r.randint(len(work))]
+
+    def mreg():
+        """Mask-logical source: usually v0, sometimes a work group."""
+        return isa.MASK_REG if r.rand() < 0.3 else reg()
+
+    def mdst():
+        """Mask-writer dest: v0 often (so later masked ops see it)."""
+        return isa.MASK_REG if r.rand() < 0.4 else reg()
+
+    def vm():
+        """The vm operand: masked-by-v0 half the time."""
+        return 0 if r.rand() < 0.5 else 1
 
     def wide_pair():
         """(wide dest, two sources outside its reserved span)."""
@@ -298,55 +439,91 @@ def random_program(r: np.random.RandomState, sew: int = 64, lmul=1,
                     free[r.randint(len(free))]
         return None
 
-    prog = [isa.VSETVL(vl, sew, lmul), isa.VLD(idx_grp, 0)]
+    # seed the v0 mask group from a memory pattern: random 0/1 mostly,
+    # with the all-ones / all-zeros edges each drawn often enough that
+    # every cell exercises them across a handful of seeds
+    mroll = r.rand()
+    if mroll < 0.15:
+        pat = np.ones(vlmax)
+    elif mroll < 0.30:
+        pat = np.zeros(vlmax)
+    else:
+        pat = r.randint(0, 2, vlmax).astype(float)
+    mem[int_region:int_region + vlmax] = pat
+
+    prog = [isa.VSETVL(req, sew, lmul), isa.VLD(idx_grp, 0),
+            isa.VLD(isa.MASK_REG, int_region)]
     for vr in work[:4]:                       # seed a few live registers
         prog.append(isa.VLD(vr, int(r.randint(int_region,
-                                              mem_words - vl))))
+                                              dump_base - max(vl, 1)))))
     pool = [op for op in ops]
     if sew not in isa.FP_SEWS:                # SEW=8: integer lane only
-        pool = [op for op in pool if op not in FP_POOL]
+        pool = [op for op in pool if op not in FP_POOL
+                and op not in FP_CMP_POOL]
     if sew not in isa.INT_SEWS:               # SEW=64: no int64 model
-        pool = [op for op in pool if op not in INT_POOL]
+        pool = [op for op in pool if op not in INT_POOL
+                and op not in INT_CMP_POOL]
     if sew == max(isa.SEWS) or 2 * Fraction(lmul) > max(isa.LMULS):
         pool = [op for op in pool
                 if op not in ("vfwmul", "vfwma", "vfncvt")]
+    if sew not in isa.FP_SEWS or sew == max(isa.SEWS):
+        pool = [op for op in pool if op != "vfwredsum"]
     if 2 * Fraction(lmul) > max(isa.LMULS):   # no room for nf >= 2 fields
         pool = [op for op in pool if op not in ("vlseg", "vsseg")]
 
     int3 = {"vadd": isa.VADD, "vsub": isa.VSUB, "vmul": isa.VMUL,
             "vsaddu": isa.VSADDU, "vsadd": isa.VSADD,
             "vssub": isa.VSSUB, "vsmul": isa.VSMUL}
+    int_cmp = {"vmseq": isa.VMSEQ, "vmsne": isa.VMSNE,
+               "vmslt": isa.VMSLT, "vmsle": isa.VMSLE}
+    fp_cmp = {"vmfeq": isa.VMFEQ, "vmflt": isa.VMFLT}
+    logical = {"vmand": isa.VMAND, "vmor": isa.VMOR, "vmxor": isa.VMXOR}
+    red = {"vredsum": isa.VREDSUM, "vredmax": isa.VREDMAX,
+           "vredmin": isa.VREDMIN, "vfwredsum": isa.VFWREDSUM}
     for _ in range(n_ops):
         op = pool[r.randint(len(pool))]
         if op == "vfma":
-            prog.append(isa.VFMA(reg(), reg(), reg()))
+            prog.append(isa.VFMA(reg(), reg(), reg(), vm=vm()))
         elif op == "vfma_vs":
-            prog.append(isa.VFMA_VS(reg(), 0, reg()))
+            prog.append(isa.VFMA_VS(reg(), 0, reg(), vm=vm()))
         elif op == "vfadd":
-            prog.append(isa.VFADD(reg(), reg(), reg()))
+            prog.append(isa.VFADD(reg(), reg(), reg(), vm=vm()))
         elif op == "vfmul":
-            prog.append(isa.VFMUL(reg(), reg(), reg()))
+            prog.append(isa.VFMUL(reg(), reg(), reg(), vm=vm()))
         elif op in int3:
-            prog.append(int3[op](reg(), reg(), reg()))
+            prog.append(int3[op](reg(), reg(), reg(), vm=vm()))
+        elif op in int_cmp:
+            prog.append(int_cmp[op](mdst(), reg(), reg(), vm=vm()))
+        elif op in fp_cmp:
+            prog.append(fp_cmp[op](mdst(), reg(), reg(), vm=vm()))
+        elif op in logical:
+            prog.append(logical[op](mdst(), mreg(), mreg()))
+        elif op == "vmerge":
+            prog.append(isa.VMERGE(reg(), reg(), reg()))
+        elif op in red:
+            prog.append(red[op](reg(), reg(), vm=vm()))
         elif op == "vins":
             prog.append(isa.VINS(reg(), 0))
         elif op == "vld":
-            prog.append(isa.VLD(reg(), int(r.randint(0, mem_words - vl))))
+            prog.append(isa.VLD(reg(), int(r.randint(0, dump_base - vl)),
+                                vm=vm()))
         elif op == "vlds":
             stride = int(r.randint(1, 4))
-            hi = mem_words - stride * (vl - 1) - 1
-            prog.append(isa.VLDS(reg(), int(r.randint(0, hi)), stride))
+            hi = dump_base - stride * max(vl - 1, 0) - 1
+            prog.append(isa.VLDS(reg(), int(r.randint(0, hi)), stride,
+                                 vm=vm()))
         elif op in ("vgather", "vluxei"):
             # index values are small ints (or clamped float garbage after
             # scatters hit the region) — both are deterministic
             cls = isa.VGATHER if op == "vgather" else isa.VLUXEI
-            prog.append(cls(reg(), int(r.randint(0, mem_words - 8)),
-                            idx_grp))
+            prog.append(cls(reg(), int(r.randint(0, dump_base - 8)),
+                            idx_grp, vm=vm()))
         elif op == "vst":
-            prog.append(isa.VST(reg(), int(r.randint(0, mem_words - vl))))
+            prog.append(isa.VST(reg(), int(r.randint(0, dump_base - vl)),
+                                vm=vm()))
         elif op == "vsuxei":
-            prog.append(isa.VSUXEI(reg(), int(r.randint(0, mem_words - 8)),
-                                   idx_grp))
+            prog.append(isa.VSUXEI(reg(), int(r.randint(0, dump_base - 8)),
+                                   idx_grp, vm=vm()))
         elif op in ("vlseg", "vsseg"):
             nf = int(r.randint(2, min(4, max(isa.LMULS) // Fraction(lmul))
                                + 1))
@@ -354,30 +531,45 @@ def random_program(r: np.random.RandomState, sew: int = 64, lmul=1,
             if not base:
                 continue
             vd = base[r.randint(len(base))]
-            addr = int(r.randint(0, mem_words - nf * vl))
+            addr = int(r.randint(0, dump_base - nf * max(vl, 1)))
             cls = isa.VLSEG if op == "vlseg" else isa.VSSEG
             prog.append(cls(vd, addr, nf))
         elif op == "vslide":
-            prog.append(isa.VSLIDE(reg(), reg(), int(r.randint(0, vl))))
+            prog.append(isa.VSLIDE(reg(), reg(),
+                                   int(r.randint(0, max(vl, 1)))))
         elif op == "vext":
             prog.append(isa.VEXT(int(r.randint(1, 4)), reg(),
-                                 int(r.randint(0, vl))))
+                                 int(r.randint(0, max(vl, 1)))))
         elif op == "ldscalar":
-            prog.append(isa.LDSCALAR(0, int(r.randint(0, mem_words))))
+            prog.append(isa.LDSCALAR(0, int(r.randint(0, dump_base))))
         elif op == "vfwmul" or op == "vfwma":
             picked = wide_pair()
             if picked is None:
                 continue
             d, a, b = picked
             cls = isa.VFWMUL if op == "vfwmul" else isa.VFWMA
-            prog.append(cls(d, a, b))
+            prog.append(cls(d, a, b, vm=vm()))
         elif op == "vfncvt":
             src = wide_bases[r.randint(len(wide_bases))]
             dst = [b for b in work
                    if b + span <= src or b >= src + wspan or b == src]
             if not dst:
                 continue
-            prog.append(isa.VFNCVT(dst[r.randint(len(dst))], src))
+            prog.append(isa.VFNCVT(dst[r.randint(len(dst))], src,
+                                   vm=vm()))
+    # dump epilogue: re-vsetvl to the FULL vlmax and store the v0 group
+    # plus the work groups into the high-half dump region, so tail lanes
+    # (mask/tail-undisturbed leftovers) are compared bit-exactly
+    prog.append(isa.VSETVL(vlmax, sew, lmul))
+    for k, b in enumerate(([isa.MASK_REG] + work)[:dump_base // vlmax]
+                          if vlmax else []):
+        prog.append(isa.VST(b, dump_base + k * vlmax))
+    # pad to a vtype-INDEPENDENT length (prelude 7 + n_ops + epilogue 10
+    # is the across-cells maximum): cells with fewer work groups or
+    # skipped ops would otherwise land in a different packed prog_len
+    # bucket and split the sweep's one-compile signature
+    while len(prog) < n_ops + 17:
+        prog.append(isa.LDSCALAR(2, 0))
     return isa.validate_program(prog), mem, sregs
 
 

@@ -107,28 +107,61 @@ def test_generator_programs_are_legal_and_diverse():
                 "VFNCVT"}
     int_names = {"VADD", "VSUB", "VMUL", "VSADDU", "VSADD", "VSSUB",
                  "VSMUL"}
+    int_cmp_names = {"VMSEQ", "VMSNE", "VMSLT", "VMSLE"}
+    fp_cmp_names = {"VMFEQ", "VMFLT"}
+    mask_names = {"VMAND", "VMOR", "VMXOR", "VMERGE"}
+    red_names = {"VREDSUM", "VREDMAX", "VREDMIN"}
     for sew, lmul in diff.vtype_combos():
         kinds = set()
+        granted = []
         for seed in range(6):
             r = np.random.RandomState(seed)
             prog, mem, sregs = diff.random_program(r, sew, lmul)
             isa.validate_program(prog)       # would raise if illegal
             kinds |= {type(i).__name__ for i in prog}
-            vl = prog[0].vl
+            # prog[0] carries the raw AVL REQUEST (vl=0 / over-ask edges
+            # included); the grant rule caps it at the grouped VLMAX
+            vl = isa.vsetvl_grant(prog[0].vl, diff.VLMAX64, sew, lmul)
+            granted.append(vl)
             vlmax = isa.grouped_vlmax(diff.VLMAX64, sew, lmul)
-            assert vl <= vlmax
-            if lmul > 1:
-                # bias guarantees multi-register groups get exercised
-                assert vl >= vlmax // 2
+            assert 0 <= vl <= vlmax
+        if lmul > 1:
+            # bias guarantees multi-register groups get exercised
+            vlmax = isa.grouped_vlmax(diff.VLMAX64, sew, lmul)
+            assert max(granted) >= vlmax // 2
         if sew == 64 or lmul == 8:
             assert not kinds & {"VFWMUL", "VFWMA", "VFNCVT"}
         if lmul == 8:
             assert not kinds & {"VLSEG", "VSSEG"}
         if sew == 8:
             assert not kinds & fp_names
+            assert not kinds & fp_cmp_names  # no FP8 compares either
+            assert not kinds & {"VFWREDSUM"}
             assert kinds & int_names         # integer class exercised
         if sew == 64:
             assert not kinds & int_names
+            assert not kinds & int_cmp_names
+            assert not kinds & {"VFWREDSUM"}  # needs a wider FP type
+        # masking/reduction classes ride along at every cell
+        assert kinds & mask_names
+        assert kinds & red_names
+
+
+def test_generator_emits_mask_and_avl_edges():
+    """Across a modest seed sweep every cell sees masked (vm=0) ops, the
+    all-ones/all-zeros v0 patterns, and the vl=0 / over-ask AVL edges —
+    the exact corners the grant-rule and tail-policy bugfixes live in."""
+    saw_vm0 = saw_req0 = saw_overask = False
+    for sew, lmul in ((64, 2), (32, 1), (8, 4)):
+        vlmax = isa.grouped_vlmax(diff.VLMAX64, sew, lmul)
+        for seed in range(40):
+            r = np.random.RandomState(seed)
+            prog, _, _ = diff.random_program(r, sew, lmul)
+            req = prog[0].vl
+            saw_req0 |= req == 0
+            saw_overask |= req > vlmax
+            saw_vm0 |= any(getattr(i, "vm", 1) == 0 for i in prog)
+    assert saw_vm0 and saw_req0 and saw_overask
 
 
 def test_cells_cover_the_same_seeds_as_grid():

@@ -1,0 +1,378 @@
+"""Mask register file, compares, and reductions (PR 6).
+
+Targeted semantics for the v0 value-model mask layout, the RVV 1.0
+mask/tail-undisturbed policy, the reduction class, and the tail-policy
+bugfixes (VSLIDE tail-undisturbed, VSETVL grant edges) — each checked
+against hand-computed numpy or the differential oracle rather than the
+random grid, so a failure names the exact rule that broke.
+
+Runs in its own CI lane (``-m mask``); the random differential grid in
+test_differential.py exercises the same ops mixed with everything else.
+"""
+from fractions import Fraction
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.ara import AraConfig
+from repro.core import isa
+from repro.core.vector_engine import ReferenceEngine
+from repro.testing import differential as diff
+
+pytestmark = pytest.mark.mask
+
+
+@pytest.fixture(scope="module")
+def eng():
+    return ReferenceEngine(AraConfig(lanes=2), vlmax=diff.VLMAX64,
+                           dtype=jnp.float32)
+
+
+def _mask(kind, vl, r):
+    if kind == "ones":
+        return np.ones(vl)
+    if kind == "zeros":
+        return np.zeros(vl)
+    return r.randint(0, 2, vl).astype(float)
+
+
+# ---------------------------------------------------------------------------
+# masked ops: mask-undisturbed destinations
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("kind", ["ones", "zeros", "rand"])
+def test_masked_vadd_keeps_inactive_elements(eng, kind):
+    """vm=0 arithmetic writes ONLY where v0 is nonzero; masked-off
+    destination elements are undisturbed (RVV 1.0 mask-undisturbed)."""
+    vl, sew = 8, 32
+    r = np.random.RandomState(3)
+    a = r.randint(-9, 9, vl).astype(float)
+    b = r.randint(-9, 9, vl).astype(float)
+    d = r.randint(-9, 9, vl).astype(float)
+    m = _mask(kind, vl, r)
+    mem = np.zeros(64)
+    mem[0:8], mem[8:16], mem[16:24], mem[24:32] = a, b, d, m
+    prog = [isa.VSETVL(vl, sew, 1), isa.VLD(isa.MASK_REG, 24),
+            isa.VLD(4, 0), isa.VLD(5, 8), isa.VLD(6, 16),
+            isa.VADD(6, 4, 5, vm=0), isa.VST(6, 32)]
+    out, _ = eng.run(prog, mem)
+    want = np.where(m != 0, a + b, d)
+    np.testing.assert_array_equal(out[32:40], want)
+
+
+@pytest.mark.parametrize("kind", ["ones", "zeros", "rand"])
+def test_masked_store_and_load(eng, kind):
+    """Masked VST touches only active memory words; masked VLD leaves
+    inactive register elements undisturbed."""
+    vl = 8
+    r = np.random.RandomState(5)
+    vals = r.randint(1, 9, vl).astype(float)
+    m = _mask(kind, vl, r)
+    mem = np.zeros(64)
+    mem[0:8], mem[8:16] = vals, m
+    mem[16:24] = -1.0                       # store target sentinel
+    mem[24:32] = 7.0                        # load source
+    prog = [isa.VSETVL(vl, 32, 1), isa.VLD(isa.MASK_REG, 8),
+            isa.VLD(4, 0),
+            isa.VST(4, 16, vm=0),           # masked store
+            isa.VLD(4, 24, vm=0),           # masked load over vals
+            isa.VST(4, 32)]
+    out, _ = eng.run(prog, mem)
+    np.testing.assert_array_equal(out[16:24], np.where(m != 0, vals, -1.0))
+    np.testing.assert_array_equal(out[32:40], np.where(m != 0, 7.0, vals))
+
+
+@settings(max_examples=12, deadline=None)
+@given(seed=st.integers(0, 999),
+       kind=st.sampled_from(["ones", "zeros", "rand"]))
+def test_masked_ops_random_programs_match_oracle(seed, kind):
+    """Property: mask-heavy random programs agree with the numpy oracle
+    across the vtype corners (incl. SEW=8 and fractional LMUL). The
+    generator seeds v0 itself; the per-kind patterns above pin the
+    all-ones/all-zeros edges deterministically."""
+    sew, lmul = [(64, 1), (32, 2), (16, Fraction(1, 2)),
+                 (8, 4)][seed % 4]
+    r = np.random.RandomState(seed)
+    prog, mem, sregs = diff.random_program(r, sew, lmul)
+    eng = _PROPERTY_ENGINE
+    mem_a, s_a = eng.run(prog, mem, sregs=dict(sregs))
+    mem_b, s_b = diff.numpy_oracle(prog, mem, diff.VLMAX64,
+                                   sregs=dict(sregs))
+    np.testing.assert_allclose(mem_a, mem_b, rtol=diff.TOL[sew],
+                               atol=diff.TOL[sew])
+
+
+_PROPERTY_ENGINE = ReferenceEngine(AraConfig(lanes=2), vlmax=diff.VLMAX64,
+                                   dtype=jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# compares, logicals, merge
+# ---------------------------------------------------------------------------
+
+
+def test_compares_write_exact_mask_layout(eng):
+    """Compares write EXACT 0/1 into the destination group (the value-
+    model mask layout docs/isa.md specifies), int and float classes."""
+    vl = 8
+    a = np.array([1, 2, 3, 4, 4, 3, 2, 1], float)
+    b = np.array([4, 3, 2, 1, 4, 3, 2, 1], float)
+    mem = np.zeros(64)
+    mem[0:8], mem[8:16] = a, b
+    prog = [isa.VSETVL(vl, 32, 1), isa.VLD(4, 0), isa.VLD(5, 8),
+            isa.VMSLT(6, 4, 5), isa.VST(6, 16),
+            isa.VMFEQ(6, 4, 5), isa.VST(6, 24),
+            isa.VMSNE(6, 4, 5), isa.VST(6, 32),
+            isa.VMSLE(6, 4, 5), isa.VST(6, 40),
+            isa.VMFLT(6, 4, 5), isa.VST(6, 48)]
+    out, _ = eng.run(prog, mem)
+    np.testing.assert_array_equal(out[16:24], (a < b).astype(float))
+    np.testing.assert_array_equal(out[24:32], (a == b).astype(float))
+    np.testing.assert_array_equal(out[32:40], (a != b).astype(float))
+    np.testing.assert_array_equal(out[40:48], (a <= b).astype(float))
+    np.testing.assert_array_equal(out[48:56], (a < b).astype(float))
+
+
+def test_mask_logicals_combine_activeness(eng):
+    """VMAND/VMOR/VMXOR operate on ACTIVENESS (nonzero), not bit
+    patterns: 2.0 AND 3.0 is active. Results are exact 0/1."""
+    vl = 4
+    a = np.array([2.0, 0.0, 3.0, 0.0])
+    b = np.array([5.0, 7.0, 0.0, 0.0])
+    mem = np.zeros(64)
+    mem[0:4], mem[4:8] = a, b
+    prog = [isa.VSETVL(vl, 32, 1), isa.VLD(4, 0), isa.VLD(5, 4),
+            isa.VMAND(6, 4, 5), isa.VST(6, 8),
+            isa.VMOR(6, 4, 5), isa.VST(6, 16),
+            isa.VMXOR(6, 4, 5), isa.VST(6, 24)]
+    out, _ = eng.run(prog, mem)
+    np.testing.assert_array_equal(out[8:12], [1, 0, 0, 0])
+    np.testing.assert_array_equal(out[16:20], [1, 1, 1, 0])
+    np.testing.assert_array_equal(out[24:28], [0, 1, 1, 0])
+
+
+def test_vmerge_selects_by_v0(eng):
+    """VMERGE writes the WHOLE body: va where v0 active, vb elsewhere."""
+    vl = 8
+    r = np.random.RandomState(11)
+    a, b = r.randn(vl), r.randn(vl)
+    m = r.randint(0, 2, vl).astype(float)
+    mem = np.zeros(64)
+    mem[0:8], mem[8:16], mem[16:24] = a, b, m
+    prog = [isa.VSETVL(vl, 32, 1), isa.VLD(isa.MASK_REG, 16),
+            isa.VLD(4, 0), isa.VLD(5, 8),
+            isa.VMERGE(6, 4, 5), isa.VST(6, 24)]
+    out, _ = eng.run(prog, mem)
+    np.testing.assert_allclose(out[24:32],
+                               np.where(m != 0, a, b).astype(np.float32),
+                               rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# reductions: every op, every SEW, fractional LMUL, vs int64/float numpy
+# ---------------------------------------------------------------------------
+
+_RED_CASES = [(sew, lmul, op)
+              for sew in (8, 16, 32, 64)
+              for lmul in (1, Fraction(1, 2), 4)
+              if isa.vtype_legal(sew, lmul)
+              for op in ("vredsum", "vredmax", "vredmin", "vfwredsum")
+              if not (op == "vfwredsum" and (sew not in isa.FP_SEWS
+                                             or sew == 64))]
+
+
+@pytest.mark.parametrize("sew,lmul,op", _RED_CASES)
+def test_every_reduction_vs_numpy(eng, sew, lmul, op):
+    """Every reduction op at every SEW (incl. fractional LMUL) against a
+    direct int64/float numpy fold over the ACTIVE body, with a random v0
+    and vm=0 — small-int values keep every fold exact at every width."""
+    vlmax = eng.vlmax_for(sew, lmul)
+    vl = max(vlmax - 3, 1)                  # non-pow2: exercises padding
+    r = np.random.RandomState(sew * 31 + int(lmul * 4))
+    vals = r.randint(-3, 4, vl).astype(float)
+    m = r.randint(0, 2, vl).astype(float)
+    m[0] = 1.0                              # at least one active lane
+    mem = np.zeros(max(64, 4 * vlmax))
+    mem[0:vl], mem[vl:2 * vl] = vals, m
+    cls = {"vredsum": isa.VREDSUM, "vredmax": isa.VREDMAX,
+           "vredmin": isa.VREDMIN, "vfwredsum": isa.VFWREDSUM}[op]
+    span = isa.group_span(lmul)
+    vs, vd = 2 * span, 4 * span
+    prog = [isa.VSETVL(vl, sew, lmul), isa.VLD(isa.MASK_REG, vl),
+            isa.VLD(vs, 0), cls(vd, vs, vm=0), isa.VEXT(1, vd, 0)]
+    _, s = eng.run(prog, mem)
+    act = vals[m != 0].astype(np.int64)
+    want = {"vredsum": act.sum(), "vredmax": act.max(),
+            "vredmin": act.min(), "vfwredsum": act.sum()}[op]
+    assert float(s[1]) == float(want)
+
+
+def test_reduction_all_inactive_yields_identity(eng):
+    """An all-inactive masked reduction returns the fold identity (sum:
+    0) — it still WRITES element 0 (RVV 1.0)."""
+    mem = np.zeros(64)
+    mem[0:8] = np.arange(1, 9, dtype=float)
+    prog = [isa.VSETVL(8, 32, 1), isa.VLD(4, 0),      # v0 stays zero
+            isa.VLD(6, 0),                            # dest pre-state
+            isa.VREDSUM(6, 4, vm=0), isa.VEXT(1, 6, 0)]
+    _, s = eng.run(prog, mem)
+    assert float(s[1]) == 0.0
+
+
+def test_reduction_vl0_writes_nothing(eng):
+    """A vl=0 reduction performs NO write at all: the destination's old
+    element 0 survives (vs the all-inactive case, which writes the
+    identity)."""
+    mem = np.zeros(64)
+    mem[0:8] = np.arange(1, 9, dtype=float)
+    prog = [isa.VSETVL(8, 32, 1), isa.VLD(4, 0), isa.VLD(6, 0),
+            isa.VSETVL(0, 32, 1),                     # grant vl=0
+            isa.VREDSUM(6, 4),
+            isa.VSETVL(8, 32, 1), isa.VEXT(1, 6, 0)]
+    _, s = eng.run(prog, mem)
+    assert float(s[1]) == 1.0                         # old element 0
+
+
+def test_reduction_tail_is_undisturbed(eng):
+    """The reduction writes element 0 of ONE register; the rest of the
+    destination group is tail-undisturbed."""
+    mem = np.zeros(64)
+    mem[0:8] = np.arange(1, 9, dtype=float)
+    prog = [isa.VSETVL(8, 32, 1), isa.VLD(4, 0), isa.VLD(6, 0),
+            isa.VREDSUM(6, 4), isa.VST(6, 16)]
+    out, _ = eng.run(prog, mem)
+    want = np.arange(1, 9, dtype=float)
+    want[0] = want.sum()
+    np.testing.assert_array_equal(out[16:24], want)
+
+
+def test_vfwredsum_accumulates_wide(eng):
+    """VFWREDSUM folds in storage precision and quantizes at 2*SEW: a
+    sum that overflows fp16 range survives a SEW=16 reduction."""
+    vl = 16
+    mem = np.zeros(64)
+    mem[0:vl] = 4096.0                       # 16 * 4096 = 65536 > fp16 max
+    prog = [isa.VSETVL(vl, 16, 1), isa.VLD(4, 0),
+            isa.VFWREDSUM(6, 4), isa.VEXT(1, 6, 0)]
+    _, s = eng.run(prog, mem)
+    assert float(s[1]) == 65536.0
+
+
+# ---------------------------------------------------------------------------
+# argmax demo program (masks + reductions composed)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("fp,sew", [(True, 32), (True, 16), (False, 8)])
+def test_argmax_program_matches_numpy(eng, fp, sew):
+    """VREDMAX + compare + VMERGE + VREDMIN == np.argmax, first-index
+    tie rule included (the §III-C slide-workaround retirement demo)."""
+    vl = 12
+    r = np.random.RandomState(sew)
+    vals = r.randint(-9, 10, vl).astype(float)
+    vals[3] = vals[9] = vals.max() + 1       # force a tie at 3 and 9
+    mem = np.zeros(128)
+    mem[0:vl] = vals
+    mem[32:32 + vl] = np.arange(vl, dtype=float)     # the iota
+    prog = [isa.VSETVL(vl, sew, 1), isa.VLD(4, 0)] \
+        + isa.argmax_program(4, 32, sd=0, huge_sreg=1, fp=fp)
+    _, s = eng.run(prog, mem, sregs={1: float(vl + 10)})
+    assert int(s[0]) == int(np.argmax(vals)) == 3
+
+
+# ---------------------------------------------------------------------------
+# tail-policy bugfixes: VSLIDE and VSETVL grant edges
+# ---------------------------------------------------------------------------
+
+
+def test_vslide_is_tail_undisturbed(eng):
+    """PR 6 bugfix: slid-in body positions past vl-amount AND the tail
+    keep the destination's old values (Ara2/RVV 1.0 tail-undisturbed) —
+    the old engine zero-filled them."""
+    vl = 8
+    mem = np.zeros(64)
+    mem[0:8] = np.arange(10, 18, dtype=float)        # dest preload
+    mem[8:16] = np.arange(1, 9, dtype=float)         # source
+    prog = [isa.VSETVL(vl, 32, 1), isa.VLD(2, 0), isa.VLD(3, 8),
+            isa.VSLIDE(2, 3, 3), isa.VST(2, 16)]
+    out, _ = eng.run(prog, mem)
+    np.testing.assert_array_equal(out[16:24],
+                                  [4, 5, 6, 7, 8, 15, 16, 17])
+
+
+def test_vsetvl_grant_rule():
+    """The explicit grant rule: vl=0 grants 0, over-ask caps at the
+    grouped VLMAX, in-range requests grant exactly, negatives are
+    illegal."""
+    vlmax = isa.grouped_vlmax(8, 64, 1)
+    assert isa.vsetvl_grant(0, 8, 64, 1) == 0
+    assert isa.vsetvl_grant(vlmax + 999, 8, 64, 1) == vlmax
+    assert isa.vsetvl_grant(5, 8, 64, 1) == 5
+    assert isa.vsetvl_grant(3, 8, 8, 4) == 3
+    with pytest.raises(ValueError):
+        isa.validate_program([isa.VSETVL(-1, 64, 1)])
+
+
+def test_vsetvl_vl0_is_noop_that_still_grants(eng):
+    """A vl=0 VSETVL executes no body anywhere downstream, but DOES
+    update vtype/vl state — the next op sees vl=0, not stale state."""
+    mem = np.zeros(64)
+    mem[0:8] = 5.0
+    prog = [isa.VSETVL(8, 32, 1), isa.VLD(4, 0),
+            isa.VSETVL(0, 32, 1),
+            isa.VST(4, 16),                  # writes nothing
+            isa.VADD(4, 4, 4)]               # touches nothing
+    out, _ = eng.run(prog, mem)
+    np.testing.assert_array_equal(out[16:24], np.zeros(8))
+
+
+def test_vsetvl_overask_caps_in_engine(eng):
+    """An over-asking program gets exactly VLMAX lanes end to end."""
+    vlmax = eng.vlmax_for(32, 1)
+    mem = np.zeros(8 * vlmax)
+    mem[0:vlmax] = 3.0
+    prog = [isa.VSETVL(vlmax + 100, 32, 1), isa.VLD(4, 0),
+            isa.VST(4, 2 * vlmax)]
+    out, _ = eng.run(prog, mem)
+    np.testing.assert_array_equal(out[2 * vlmax:3 * vlmax],
+                                  np.full(vlmax, 3.0))
+    np.testing.assert_array_equal(out[3 * vlmax:4 * vlmax],
+                                  np.zeros(vlmax))
+
+
+# ---------------------------------------------------------------------------
+# mask legality: the v0-overlap rule
+# ---------------------------------------------------------------------------
+
+
+def test_masked_op_may_not_write_v0():
+    """A vm=0 op whose destination overlaps the v0 group is illegal
+    (RVV 1.0), unless it's a mask-writer or a reduction."""
+    with pytest.raises(ValueError):
+        isa.validate_program([isa.VSETVL(8, 32, 1),
+                              isa.VADD(0, 4, 8, vm=0)])
+    with pytest.raises(ValueError):
+        isa.validate_program([isa.VSETVL(8, 32, 2),
+                              isa.VMERGE(0, 4, 8)])
+    # exempt: mask writers and reductions may target v0
+    isa.validate_program([isa.VSETVL(8, 32, 1),
+                          isa.VMSEQ(0, 4, 8, vm=0)])
+    isa.validate_program([isa.VSETVL(8, 32, 1),
+                          isa.VREDSUM(0, 4, vm=0)])
+
+
+def test_compare_class_gating():
+    """Int compares need an integer SEW, float compares a float SEW —
+    same classes as the arithmetic they guard."""
+    with pytest.raises(ValueError):
+        isa.validate_program([isa.VSETVL(8, 64, 1), isa.VMSLT(4, 8, 12)])
+    with pytest.raises(ValueError):
+        isa.validate_program([isa.VSETVL(8, 8, 1), isa.VMFEQ(4, 8, 12)])
+    with pytest.raises(ValueError):
+        isa.validate_program([isa.VSETVL(8, 64, 1),
+                              isa.VFWREDSUM(4, 8)])
+    isa.validate_program([isa.VSETVL(8, 32, 1), isa.VMSLT(4, 8, 12)])
+    isa.validate_program([isa.VSETVL(8, 16, 1), isa.VMFEQ(4, 8, 12)])

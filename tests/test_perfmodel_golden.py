@@ -46,6 +46,9 @@ def compute_table():
             key = f"daxpy/l{lanes}/n{DAXPY_N}/sew{sew}/{lm}"
             table[key] = pm.daxpy_cycles(cfg, DAXPY_N, ew_bits=sew,
                                          lmul=lmul)
+            key = f"vred/l{lanes}/n{DAXPY_N}/sew{sew}/{lm}"
+            table[key] = pm.reduction_cycles(cfg, DAXPY_N, ew_bits=sew,
+                                             lmul=lmul)
     return table
 
 

@@ -144,6 +144,37 @@ def test_illegal_program_raises_on_host_before_tracing():
     assert eng.cache.stats.compiles == 0
 
 
+def test_vxsat_does_not_leak_across_batched_programs():
+    """Sticky vxsat is PER PROGRAM: a saturating program batched next to
+    a non-saturating one must not leak its flag sideways — and a trace-
+    cache hit must not replay stale state (PR 6 isolation regression)."""
+    eng = _engine()
+    mem = np.zeros(64)
+    mem[0:8] = 100.0                 # 100 + 100 saturates int8
+    mem[8:16] = 1.0
+    sat = [isa.VSETVL(8, 8, 1), isa.VLD(4, 0), isa.VSADD(4, 4, 4),
+           isa.VST(4, 32)]
+    clean = [isa.VSETVL(8, 8, 1), isa.VLD(4, 8), isa.VSADD(4, 4, 4),
+             isa.VST(4, 32)]
+    mems, srs = eng.run_many([sat, clean, sat], [mem, mem, mem])
+    assert float(srs[0][isa.VXSAT_SREG]) == 1.0
+    assert float(srs[1][isa.VXSAT_SREG]) == 0.0   # no sideways leak
+    assert float(srs[2][isa.VXSAT_SREG]) == 1.0
+    # same signature again, now all-clean: the cache hit must start from
+    # THIS batch's zeroed flags, not anything sticky from the last run
+    hits_before = eng.cache.stats.hits
+    _, srs2 = eng.run_many([clean, clean, clean], [mem, mem, mem])
+    assert eng.cache.stats.hits == hits_before + 1
+    assert all(float(s[isa.VXSAT_SREG]) == 0.0 for s in srs2)
+    # and a masked-off saturating lane must NOT set the flag
+    m2 = mem.copy()
+    m2[16:24] = 0.0                  # v0 pattern: all inactive
+    masked = [isa.VSETVL(8, 8, 1), isa.VLD(isa.MASK_REG, 16),
+              isa.VLD(4, 0), isa.VSADD(4, 4, 4, vm=0), isa.VST(4, 32)]
+    _, srs3 = eng.run_many([masked], [m2])
+    assert float(srs3[0][isa.VXSAT_SREG]) == 0.0
+
+
 def test_lru_evicts_oldest():
     cache = staging.TraceCache(maxsize=2)
     eng = _engine(cache=cache)
