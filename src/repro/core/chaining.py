@@ -18,14 +18,28 @@ from jax.sharding import PartitionSpec as PS
 from repro.core.compat import shard_map
 
 
-def all_gather_matmul(x, w, mesh, axis: str, transpose: bool = False,
-                      group: int = 1):
+def _check_divisible(fn: str, what: str, dim: int, by: int, why: str):
+    """Ring collectives move fixed-size shards: a ragged dimension would
+    either crash deep inside the scan (shard_map refuses the split) or
+    silently drop the remainder rows (a floor-divided slice). Fail up
+    front with the shapes in the message instead."""
+    if by < 1 or dim % by:
+        raise ValueError(
+            f"{fn}: {what}={dim} is not divisible by {why}={by}; "
+            f"ring steps move fixed-size shards, so ragged shapes "
+            f"cannot be scattered exactly — pad {what} to a multiple "
+            f"of {by}")
+
+
+def all_gather_matmul(x, w, mesh, axis: str, group: int = 1):
     """y = all_gather(x, axis) @ w, overlapped.
 
-    x: (m_local, k) sharded on ``axis`` along m; w: (k, n) replicated.
-    Computes x_full @ w without first materializing x_full: each step
-    multiplies the shard(s) it holds while ppermuting the next in.
-    Returns (m_local * n_axis, n) sharded like an all-gather result.
+    x: (m, k) sharded on ``axis`` along m; w: (k, n) replicated.
+    Computes x @ w without first materializing the gathered x on any
+    device: each step multiplies the shard(s) it holds while ppermuting
+    the next in. Returns (m, n) sharded like an all-gather result.
+    Requires ``m % n_dev == 0`` (validated up front — shard_map cannot
+    split a ragged row dimension).
 
     ``group`` is the ring's LMUL analogue (register grouping, §IV): the
     steady-state loop moves a ``group``-shard buffer per ppermute and runs
@@ -33,10 +47,18 @@ def all_gather_matmul(x, w, mesh, axis: str, transpose: bool = False,
     launches instead of n_dev, each hiding a ``group``× longer compute
     chain, exactly how grouped vector registers amortize the issue
     interval. A short fill phase of ``group - 1`` single-shard hops plays
-    the operand-queue warm-up. Requires ``n_dev % group == 0``.
+    the operand-queue warm-up. Requires ``n_dev % group == 0`` (the
+    grouped ring's step permutation i -> i+group only closes a cycle
+    that visits every shard owner when group divides the ring).
     """
     n_dev = mesh.shape[axis]
-    assert n_dev % group == 0, (n_dev, group)
+    _check_divisible("all_gather_matmul", "m", x.shape[0], n_dev,
+                     f"mesh axis '{axis}' size")
+    _check_divisible("all_gather_matmul", "n_dev", n_dev, group, "group")
+    if x.shape[1] != w.shape[0]:
+        raise ValueError(
+            f"all_gather_matmul: contraction mismatch x{tuple(x.shape)} "
+            f"@ w{tuple(w.shape)}")
 
     def device_fn(x_loc, w_loc):
         idx = jax.lax.axis_index(axis)
@@ -90,11 +112,23 @@ def all_gather_matmul(x, w, mesh, axis: str, transpose: bool = False,
 def matmul_reduce_scatter(x, w, mesh, axis: str):
     """y = reduce_scatter(x @ w_sharded, axis), overlapped.
 
-    x: (m, k_local) sharded on k; w: (k_local, n). The full (m, n) partial
-    product never materializes per device: accumulate ring-style, each
-    device ends with its (m/n_dev, n) slice of the sum.
+    x: (m, k) sharded on k; w: (k, n) sharded on k. The full (m, n)
+    partial product never materializes per device: accumulate
+    ring-style, each device ends with its (m/n_dev, n) slice of the
+    sum. Requires ``k % n_dev == 0`` (the shard split) and
+    ``m % n_dev == 0`` (the scatter slices) — both validated up front;
+    the old floor-divided slice silently DROPPED the trailing
+    ``m % n_dev`` rows instead of failing.
     """
     n_dev = mesh.shape[axis]
+    _check_divisible("matmul_reduce_scatter", "k", x.shape[1], n_dev,
+                     f"mesh axis '{axis}' size")
+    _check_divisible("matmul_reduce_scatter", "m", x.shape[0], n_dev,
+                     f"mesh axis '{axis}' size")
+    if x.shape[1] != w.shape[0]:
+        raise ValueError(
+            f"matmul_reduce_scatter: contraction mismatch "
+            f"x{tuple(x.shape)} @ w{tuple(w.shape)}")
 
     def device_fn(x_loc, w_loc):
         idx = jax.lax.axis_index(axis)

@@ -1,0 +1,103 @@
+"""ClusterEngine: hierarchical clusters × lanes scale-out (AraXL/Spatz).
+
+The paper's scalability story stops at one core: identical lanes behind
+a shared sequencer, ``LaneEngine`` as its software mirror (one flat
+``shard_map`` over a ``lanes`` axis). AraXL scales the same design to 64
+lanes by grouping lanes into *clusters* behind a hierarchical
+interconnect; Spatz clusters compact vector units. This module
+reproduces that topology rung:
+
+- :func:`make_cluster_mesh` builds the 2-D ``(clusters, lanes)`` device
+  mesh (outer axis = cluster id, inner axis = lane-in-cluster).
+- :class:`ClusterEngine` runs the *unchanged* staged step from
+  ``core/staging.py`` per lane — a lane's global index is
+  ``cluster * lanes_per_cluster + lane_in_cluster`` — under one
+  ``shard_map`` over both axes. Every all-lane reconciliation (VLSU
+  scatter counts, SLDU slide/extract/reduction gathers, the sticky
+  vxsat flag) folds **intra-cluster first, then across clusters**
+  (``psum``/``pmax`` over the inner axis, then the outer). Per-lane
+  contributions are disjoint, so the two-stage fold is bit-identical
+  to the flat one: a ClusterEngine at any (clusters, lanes/cluster)
+  shape matches the ReferenceEngine and the numpy oracle bit for bit
+  on the full SEW × LMUL differential grid.
+
+The timing side of the hierarchy lives in ``core/perfmodel.py``
+(``CLUSTER_HOP``, the intra+inter reduction tree, the clustered VLSU
+collection term) and ``vector_engine.simulate_timing(clusters=)``;
+``benchmarks/scaleout.py`` sweeps both against each other from 4 to 64
+total lanes. See docs/engine.md § "Cluster topology".
+
+Trace-cache identity: the signature carries ``clusters`` and the full
+mesh fingerprint (axis names, per-axis sizes, device order), so a 2×2
+cluster grid, a 4×1 grid and a flat 4-lane mesh — equal total lanes —
+never share a compiled executable (their reconciliation nesting
+differs; replaying one for another would be a miscompile).
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.ara import AraConfig
+from repro.core import staging
+from repro.core.vector_engine import _StagedEngine
+
+CLUSTER_AXES = ("clusters", "lanes")
+
+
+def make_cluster_mesh(clusters: int, lanes_per_cluster: int,
+                      devices: Optional[Sequence] = None,
+                      axes: Sequence[str] = CLUSTER_AXES):
+    """A (clusters, lanes_per_cluster) mesh over the first
+    clusters*lanes_per_cluster devices (row-major: cluster c owns the
+    device block [c*lpc, (c+1)*lpc) — the contiguous grouping a
+    hierarchical interconnect would wire)."""
+    import jax
+    devs = list(devices if devices is not None else jax.devices())
+    n = clusters * lanes_per_cluster
+    if len(devs) < n:
+        raise ValueError(
+            f"cluster mesh {clusters}x{lanes_per_cluster} needs {n} "
+            f"devices, have {len(devs)}")
+    return jax.sharding.Mesh(
+        np.array(devs[:n]).reshape(clusters, lanes_per_cluster),
+        tuple(axes))
+
+
+class ClusterEngine(_StagedEngine):
+    """Nested clusters × lanes-per-cluster staged engine.
+
+    Same ISA semantics as ReferenceEngine/LaneEngine (differentially
+    tested bit-exact); the topology only changes *where* elements live
+    and how reconciliation folds. Construct either from an explicit 2-D
+    mesh (``mesh=``, axis names in ``axes``) or from a
+    ``(clusters, lanes_per_cluster)`` shape, in which case the mesh is
+    built over ``jax.devices()``.
+    """
+
+    kind = "cluster"
+
+    def __init__(self, cfg: AraConfig, clusters: int = 2,
+                 lanes_per_cluster: int = 2, mesh=None,
+                 axes: Sequence[str] = CLUSTER_AXES,
+                 vlmax: Optional[int] = None, dtype=jnp.float32,
+                 cache: Optional[staging.TraceCache] = None,
+                 devices: Optional[Sequence] = None):
+        if mesh is None:
+            mesh = make_cluster_mesh(clusters, lanes_per_cluster,
+                                     devices=devices, axes=axes)
+        self.mesh = mesh
+        self.axes = tuple(axes)
+        self.clusters = int(mesh.shape[self.axes[0]])
+        self.lanes_per_cluster = int(mesh.shape[self.axes[1]])
+        self.lanes = self.clusters * self.lanes_per_cluster
+        self.mesh_key = staging.mesh_fingerprint(mesh, self.axes)
+        vlmax = vlmax or cfg.vlmax_dp
+        super().__init__(cfg, (vlmax // self.lanes) * self.lanes,
+                         dtype=dtype, cache=cache)
+
+    @property
+    def topology(self):
+        return (self.clusters, self.lanes_per_cluster)

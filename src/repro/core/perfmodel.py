@@ -44,6 +44,39 @@ STRIP_SETVL = 2.0  # cycles: vsetvl/dispatch serialization per extra strip
                    # strip's memory time — chaining hides it)
 RED_HOP = 2.0      # cycles per inter-lane reduction-tree hop (one SLDU
                    # ring stage per halving of the active lane set)
+CLUSTER_HOP = 6.0  # cycles per inter-CLUSTER hop: one stage of the
+                   # hierarchical interconnect (AraXL §IV analogue) —
+                   # crossing a cluster boundary costs a few lane-hops'
+                   # worth of arbitration + wiring latency, which is why
+                   # all-to-one slide/reduction traffic kills weak
+                   # scaling before the FPUs run out (docs/engine.md)
+
+
+def tree_hops(n: int) -> int:
+    """Depth of the identity-PADDED binary reduction tree over ``n``
+    leaves: the engines fold a power-of-two window padded with the op
+    identity (``staging.build_runner``, ``differential._tree_reduce``),
+    so a non-power-of-two lane count pays exactly the next power of
+    two's depth — lanes=6 costs the lanes=8 tree, because the padded
+    slots still occupy fold stages. Computed in integer arithmetic
+    (``(n-1).bit_length()``), never via float ``log2``: for ``n`` just
+    above a power of two (e.g. ``2**49 + 1``) ``log2`` rounds DOWN to
+    the power itself and ``ceil`` then miscounts the final hop, so the
+    float spelling and the padded tree disagree exactly where the tree
+    isn't full. Golden-pinned for pow2 lane counts (byte-identical to
+    the old ``ceil(log2(lanes))``) with non-pow2 keys alongside."""
+    n = int(n)
+    if n <= 1:
+        return 0
+    return (n - 1).bit_length()
+
+
+def _split_lanes(lanes: int, clusters: int) -> int:
+    """lanes-per-cluster, validating the topology divides evenly."""
+    if clusters < 1 or lanes % clusters:
+        raise ValueError(
+            f"lanes={lanes} not divisible into clusters={clusters}")
+    return lanes // clusters
 
 
 @dataclasses.dataclass(frozen=True)
@@ -81,7 +114,7 @@ class KernelPerf:
 def matmul_cycles(cfg: AraConfig, n: int, t: int = 4,
                   issue_interval: float | None = None,
                   mem_bytes_per_cycle: float | None = None,
-                  ew_bits: int = 64, lmul=1) -> float:
+                  ew_bits: int = 64, lmul=1, clusters: int = 1) -> float:
     """Cycle model, multi-precision aware (§III-E4): at element width
     ``ew_bits`` the FPU retires 64/ew elements/lane/cycle, memory moves
     ew/8-byte elements, and VLMAX grows by 64/ew (fewer strip-mine trips).
@@ -103,10 +136,21 @@ def matmul_cycles(cfg: AraConfig, n: int, t: int = 4,
     (mf2/mf4, exact Fractions) shrinks VLMAX — more strips, never fewer
     cycles: fractional grouping exists for mixed-width EMUL legality,
     not speed, and the golden table pins that honesty too.
+
+    ``clusters`` (AraXL scale-out): the VLSU word collection happens
+    per cluster — C_MEM_LANE scales with lanes/clusters, not total
+    lanes — but every burst then crosses the hierarchical interconnect,
+    ``CLUSTER_HOP * tree_hops(clusters)`` cycles per collection. The
+    arithmetic is untouched (lanes stay identical compute units), so
+    clustering trades the O(lanes) flat-crossbar arbitration for a
+    log-depth interconnect term — the reason AraXL can wire 64 lanes
+    at all. ``clusters=1`` reproduces the single-core model exactly.
     """
     from repro.core.isa import NUM_VREGS, group_span
     t = max(1, min(t, NUM_VREGS // group_span(lmul) - 2))
     lanes = cfg.lanes
+    lpc = _split_lanes(lanes, clusters)
+    hop = CLUSTER_HOP * tree_hops(clusters)
     ways = 64 // ew_bits                     # datapath subdivision
     ebytes = ew_bits / 8.0
     delta = issue_interval if issue_interval is not None \
@@ -123,13 +167,15 @@ def matmul_cycles(cfg: AraConfig, n: int, t: int = 4,
         n_blocks = math.ceil(n / t)
         per_block = 0.0
         # phase I + III: t C-row loads + t stores, burst startup each
-        per_block += 2 * t * (row_mem + L_MEM)
+        # (every burst crosses the inter-cluster interconnect once)
+        per_block += 2 * t * (row_mem + L_MEM + hop)
         # phase II: n columns; per column one B-row vld (chained) and t vmadds
         issue_cycles = t * delta + VLD_ISSUE
         fpu_cycles = t * e / ways
-        # B row streams under compute; VLSU word collection across lanes
-        # adds arbitration latency proportional to lane count (§VI-C)
-        mem_cycles = row_mem + C_MEM_LANE * lanes
+        # B row streams under compute; VLSU word collection arbitrates
+        # across the lanes of ONE cluster (§VI-C), then the burst walks
+        # the log-depth inter-cluster stage
+        mem_cycles = row_mem + C_MEM_LANE * lpc + hop
         per_col = max(issue_cycles, fpu_cycles, mem_cycles) \
             + C_COL_LANE * lanes
         per_block += n * per_col
@@ -140,9 +186,10 @@ def matmul_cycles(cfg: AraConfig, n: int, t: int = 4,
 
 
 def matmul_perf(cfg: AraConfig, n: int, ew_bits: int = 64, lmul=1,
-                **kw) -> KernelPerf:
+                clusters: int = 1, **kw) -> KernelPerf:
     return KernelPerf("matmul",
-                      matmul_cycles(cfg, n, ew_bits=ew_bits, lmul=lmul, **kw),
+                      matmul_cycles(cfg, n, ew_bits=ew_bits, lmul=lmul,
+                                    clusters=clusters, **kw),
                       2.0 * n ** 3, cfg.lanes, ew_bits, lmul)
 
 
@@ -197,29 +244,38 @@ def daxpy_perf(cfg: AraConfig, n: int, ew_bits: int = 64,
 
 
 def reduction_cycles(cfg: AraConfig, n: int, ew_bits: int = 64,
-                     lmul=1) -> float:
+                     lmul=1, clusters: int = 1) -> float:
     """Strip-mined VLD + vred loop: per strip, the load streams ew/8-byte
     elements over the memory port, then the SLDU folds e = vl/lanes
     local elements at the datapath's 64/ew rate and walks the inter-lane
-    binary tree — ``RED_HOP * ceil(log2(lanes))`` cycles, the reduction's
-    irreducible serial tail (why wider machines win less here than on
-    matmul: the tree term GROWS with lanes). Extra strips pay the vsetvl
+    binary tree — ``RED_HOP * tree_hops(lanes)`` cycles of the PADDED
+    pow2 tree (see :func:`tree_hops`), the reduction's irreducible
+    serial tail (why wider machines win less here than on matmul: the
+    tree term GROWS with lanes). Extra strips pay the vsetvl
     serialization like daxpy's; the accumulate-into-scalar dependency
     adds one DRAIN per strip boundary (the fold result is needed before
     the next strip's fold can retire).
+
+    ``clusters`` splits the tree hierarchically (AraXL): the intra-
+    cluster stage folds lanes/clusters lanes at ``RED_HOP`` per hop,
+    then the inter-cluster stage folds the cluster partials at
+    ``CLUSTER_HOP`` per hop — the all-to-one term that dominates weak
+    scaling at high lane counts (``benchmarks/scaleout.py`` charts it).
+    ``clusters=1`` is the flat single-core tree, unchanged.
     """
     lanes = cfg.lanes
+    lpc = _split_lanes(lanes, clusters)
     ways = 64 // ew_bits
     ebytes = ew_bits / 8.0
     vlmax = cfg.vlmax(ew_bits, lmul)
-    hops = math.ceil(math.log2(lanes)) if lanes > 1 else 0
+    tree = RED_HOP * tree_hops(lpc) + CLUSTER_HOP * tree_hops(clusters)
     cycles = float(cfg.config_overhead_cycles)
     c = 0
     while c < n:
         vl = min(n - c, vlmax)
         e = vl / lanes
         cycles += ebytes * vl / cfg.mem_bytes_per_cycle + L_MEM
-        cycles += e / ways + RED_HOP * hops
+        cycles += e / ways + tree
         if c:
             cycles += STRIP_SETVL + DRAIN
         c += vl
@@ -227,8 +283,9 @@ def reduction_cycles(cfg: AraConfig, n: int, ew_bits: int = 64,
 
 
 def reduction_perf(cfg: AraConfig, n: int, ew_bits: int = 64,
-                   lmul=1) -> KernelPerf:
-    return KernelPerf("reduction", reduction_cycles(cfg, n, ew_bits, lmul),
+                   lmul=1, clusters: int = 1) -> KernelPerf:
+    return KernelPerf("reduction",
+                      reduction_cycles(cfg, n, ew_bits, lmul, clusters),
                       float(n), cfg.lanes, ew_bits, lmul)
 
 

@@ -212,19 +212,32 @@ def pack_tables(tables, pad_to=None):
 # ---------------------------------------------------------------------------
 
 
+def mesh_fingerprint(mesh, axes) -> tuple:
+    """The full topology identity of a mesh: per-axis (name, size) pairs
+    in nesting order, plus the device order. Two meshes with the same
+    TOTAL device count but different shapes — a 4-lane flat mesh and a
+    2×2 clusters×lanes mesh, or a 2×4 and a 4×2 cluster grid — must
+    produce distinct fingerprints, or the trace cache would replay an
+    executable whose psum/pmax reconciliation was compiled for the
+    wrong axis nesting."""
+    return (tuple((a, int(mesh.shape[a])) for a in axes),
+            tuple(d.id for d in np.asarray(mesh.devices).ravel()))
+
+
 @dataclasses.dataclass(frozen=True)
 class Signature:
     """Static shape key of an encoded batch — everything XLA specializes
     on. Programs differing only in opcodes/operands/vtype share one."""
-    kind: str            # "ref" | "lane"
-    lanes: int
+    kind: str            # "ref" | "lane" | "cluster"
+    lanes: int           # TOTAL lanes across all clusters
     slots: int           # per-lane element slots per vector register
     window: int          # global flat element window (>= the batch max vl)
     mem_words: int       # padded memory words
     prog_len: int        # padded instruction rows
     batch: int
     storage: str         # canonical dtype name
-    mesh_key: tuple = ()  # (axis, device ids) for the lane engine
+    mesh_key: tuple = ()  # mesh_fingerprint(): axes+sizes, device order
+    clusters: int = 1    # mesh nesting: lanes are grouped clusters-ways
 
 
 @dataclasses.dataclass
@@ -375,7 +388,7 @@ INT_OPS = {"vadd": ("vadd", False), "vsub": ("vsub", False),
 
 
 def build_runner(sig: Signature, stats: CacheStats, mesh=None,
-                 axis: str = None):
+                 axis: str = None, axes: tuple = None):
     """Compile the one executable for ``sig``.
 
     Returns ``fn(mems, svecs, sizes, rows) -> (mems, svecs)`` where
@@ -385,6 +398,18 @@ def build_runner(sig: Signature, stats: CacheStats, mesh=None,
     (memory replicated, reconciled through psum — the VLSU as the single
     all-lane unit), single-device otherwise: both engines share this one
     step definition, so their semantics cannot drift.
+
+    ``axes`` selects the HIERARCHICAL topology (the ClusterEngine): a
+    ``(clusters_axis, lanes_axis)`` pair naming a 2-D mesh whose outer
+    axis groups ``sig.clusters`` clusters of ``lanes/clusters`` lanes.
+    The staged step is unchanged per-lane — a lane's global index is
+    ``cluster * lanes_per_cluster + lane_in_cluster`` — and every
+    reconciliation (VLSU scatter counts, SLDU slide/extract gathers,
+    reduction-window scatters, the sticky vxsat pmax) folds
+    intra-cluster first, then across clusters. The contributions are
+    disjoint per lane, so the two-stage fold is bit-identical to the
+    flat one — the hierarchy models AraXL's cluster interconnect
+    without perturbing the differential contract.
 
     Element layout per lane: local flat-group slot ``p`` of a register
     group holds global element ``lane + p * lanes`` (the interleaved VRF
@@ -445,14 +470,29 @@ def build_runner(sig: Signature, stats: CacheStats, mesh=None,
 
     def one_program(mem, s, size, rows):
         stats.compiles += 1                # trace-time side effect
-        lane = jax.lax.axis_index(axis) if axis else 0
+        if axes:
+            # clusters × lanes-per-cluster nesting: the global lane id
+            # concatenates cluster blocks, so cluster c owns the lane
+            # range [c*lpc, (c+1)*lpc)
+            lpc = lanes // sig.clusters
+            lane = jax.lax.axis_index(axes[0]) * lpc \
+                + jax.lax.axis_index(axes[1])
+        else:
+            lane = jax.lax.axis_index(axis) if axis else 0
         e = jnp.arange(window)
         ids = lane + e * lanes             # global element id per slot
 
         def allsum(x):
+            if axes:
+                # hierarchical reconciliation: intra-cluster ring first
+                # (the cheap local interconnect), then the inter-cluster
+                # stage — bit-exact either way (disjoint contributions)
+                return jax.lax.psum(jax.lax.psum(x, axes[1]), axes[0])
             return jax.lax.psum(x, axis) if axis else x
 
         def allmax(x):
+            if axes:
+                return jax.lax.pmax(jax.lax.pmax(x, axes[1]), axes[0])
             return jax.lax.pmax(x, axis) if axis else x
 
         def step(carry, row):
@@ -722,6 +762,9 @@ def build_runner(sig: Signature, stats: CacheStats, mesh=None,
     if mesh is None:
         return jax.jit(batched, donate_argnums=(0, 1))
     from jax.sharding import PartitionSpec as PS
+    # one shard_map over every mesh axis (flat "lanes" or the nested
+    # clusters × lanes pair): memory/scalars replicated, reconciled in
+    # the step via the allsum/allmax folds above
     sharded = _shard_map(batched, mesh=mesh,
                          in_specs=(PS(), PS(), PS(), PS()),
                          out_specs=(PS(), PS()), check_vma=False)

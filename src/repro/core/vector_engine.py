@@ -90,7 +90,8 @@ import numpy as np
 
 from repro.configs.ara import AraConfig
 from repro.core import isa, staging
-from repro.core.perfmodel import C_MEM_LANE, L_MEM, RED_HOP
+from repro.core.perfmodel import (C_MEM_LANE, CLUSTER_HOP, L_MEM, RED_HOP,
+                                  tree_hops)
 
 CHAIN_LAG = 4.0   # cycles: consumer starts this far behind producer (chaining)
 
@@ -108,8 +109,10 @@ class _StagedEngine:
 
     kind = "ref"
     lanes = 1
+    clusters = 1
     mesh = None
-    axis = None
+    axis = None          # flat lane axis (LaneEngine)
+    axes = None          # (clusters, lanes) axis pair (ClusterEngine)
     mesh_key = ()
 
     def __init__(self, cfg: AraConfig, vlmax: Optional[int] = None,
@@ -137,7 +140,8 @@ class _StagedEngine:
         return staging.Signature(
             kind=self.kind, lanes=self.lanes, slots=slots, window=window,
             mem_words=mem_words, prog_len=prog_len, batch=batch,
-            storage=jnp.dtype(self._storage).name, mesh_key=self.mesh_key)
+            storage=jnp.dtype(self._storage).name, mesh_key=self.mesh_key,
+            clusters=self.clusters)
 
     def _window(self, rows) -> int:
         """Flat element window for a batch: sized to the batch's max vl
@@ -184,7 +188,8 @@ class _StagedEngine:
             w = max(w, -(-int(window) // self.lanes) * self.lanes)
         sig = self.signature(w, words, rows["op"].shape[1], n)
         fn = self.cache.get(sig, lambda: staging.build_runner(
-            sig, self.cache.stats, mesh=self.mesh, axis=self.axis))
+            sig, self.cache.stats, mesh=self.mesh, axis=self.axis,
+            axes=self.axes))
         mem_out, s_out = fn(jnp.asarray(mems), jnp.asarray(s0),
                             jnp.asarray(sizes),
                             {k: jnp.asarray(a) for k, a in rows.items()})
@@ -222,8 +227,10 @@ class LaneEngine(_StagedEngine):
         self.mesh = mesh
         self.axis = axis
         self.lanes = mesh.shape[axis]
-        self.mesh_key = (axis, tuple(d.id for d in np.asarray(
-            mesh.devices).ravel()))
+        # full topology identity (axis names, per-axis sizes, device
+        # order): a flat 4-lane mesh must never share a cache entry with
+        # any other topology of 4 devices (e.g. a 2×2 cluster grid)
+        self.mesh_key = staging.mesh_fingerprint(mesh, (axis,))
         vlmax = vlmax or cfg.vlmax_dp
         super().__init__(cfg, (vlmax // self.lanes) * self.lanes,
                          dtype=dtype, cache=cache)
@@ -273,8 +280,21 @@ _MASK_UNIT = isa._MASK_WRITERS + (isa.VMERGE,)
 
 
 def simulate_timing(program, cfg: AraConfig,
-                    vlmax: Optional[int] = None) -> TimingReport:
+                    vlmax: Optional[int] = None,
+                    clusters: int = 1) -> TimingReport:
+    """Event-driven scoreboard estimate. ``clusters`` models the AraXL
+    scale-out topology the ClusterEngine executes: VLSU collection
+    arbitrates per cluster (C_MEM_LANE × lanes/clusters) and every
+    burst, slide and reduction then crosses the hierarchical
+    interconnect (CLUSTER_HOP per inter-cluster tree hop) — the same
+    terms ``perfmodel.reduction_cycles``/``matmul_cycles`` charge in
+    closed form, cross-validated in ``benchmarks/scaleout.py``."""
     lanes = cfg.lanes
+    if clusters < 1 or lanes % clusters:
+        raise ValueError(
+            f"lanes={lanes} not divisible into clusters={clusters}")
+    lpc = lanes // clusters
+    xhop = CLUSTER_HOP * tree_hops(clusters)  # inter-cluster stage
     vlmax64 = vlmax or cfg.vlmax_dp
     bw = cfg.mem_bytes_per_cycle
     issue_t = 0.0
@@ -313,7 +333,8 @@ def simulate_timing(program, cfg: AraConfig,
                 occ = float(vl * ins.nf)  # field walk per element
             else:
                 occ = (sew / 8.0) * vl / bw
-            unit, lat = "vlsu", occ + L_MEM + C_MEM_LANE * lanes
+            unit = "vlsu"
+            lat = occ + L_MEM + C_MEM_LANE * lpc + xhop
         elif t is isa.LDSCALAR:
             unit, occ, lat = "scalar", 1.0, 2.0
         elif t in _INT_ALU:
@@ -325,16 +346,17 @@ def simulate_timing(program, cfg: AraConfig,
             occ = e / ways
             lat = occ + CHAIN_LAG
         elif t in isa._REDUCTIONS:
-            # local fold at the datapath rate + the inter-lane binary
-            # tree: RED_HOP cycles per halving of the lane set — the
-            # serial tail that grows with lanes (perfmodel.reduction_cycles
-            # charges the identical term; golden-pinned)
-            hops = int(np.ceil(np.log2(lanes))) if lanes > 1 else 0
+            # local fold at the datapath rate + the PADDED binary tree
+            # (perfmodel.tree_hops — integer, never float log2): RED_HOP
+            # per intra-cluster hop, then CLUSTER_HOP per inter-cluster
+            # hop — the serial tail that grows with lanes
+            # (perfmodel.reduction_cycles charges the identical term;
+            # golden-pinned)
             unit = "sldu"
-            occ = e / ways + RED_HOP * hops
+            occ = e / ways + RED_HOP * tree_hops(lpc) + xhop
             lat = occ + CHAIN_LAG
         elif t in (isa.VINS, isa.VEXT, isa.VSLIDE):
-            unit, occ = "sldu", e / ways + (lanes / 8.0)
+            unit, occ = "sldu", e / ways + (lpc / 8.0) + xhop
             lat = occ
         else:
             unit = "fpu"

@@ -1,0 +1,118 @@
+"""Unit tests for the cluster scale-out layer (host-side, no devices).
+
+The functional half of the ClusterEngine story — bit-exact differential
+against the ReferenceEngine, per-topology trace-cache identity — lives
+in test_differential.py / test_trace_cache.py behind fake-device
+subprocesses. Here: the pure-host pieces — the padded reduction-tree
+arithmetic (the non-pow2 bugfix), topology validation, and the clustered
+perf-model terms — which need no devices and run on every tier-1 pass.
+"""
+import math
+
+import pytest
+
+from repro.configs.ara import AraConfig
+from repro.core import perfmodel as pm
+from repro.core.cluster import make_cluster_mesh
+from repro.core.vector_engine import simulate_timing
+from repro.core import isa
+
+CFG16 = AraConfig(lanes=16)
+
+
+def test_tree_hops_matches_ceil_log2_at_pow2():
+    """At power-of-two leaf counts the integer spelling and the old
+    float one agree — exactly why every pre-existing golden key stayed
+    byte-identical when reduction_cycles switched over."""
+    for n in (2, 4, 8, 16, 32, 64, 1024):
+        assert pm.tree_hops(n) == math.ceil(math.log2(n))
+    assert pm.tree_hops(0) == pm.tree_hops(1) == 0
+
+
+def test_tree_hops_charges_the_padded_tree_for_non_pow2():
+    """The engines fold an identity-padded pow2 window, so lanes=6 pays
+    the lanes=8 tree — not some fictional fractional depth."""
+    assert pm.tree_hops(3) == pm.tree_hops(4) == 2
+    assert pm.tree_hops(5) == pm.tree_hops(6) == pm.tree_hops(8) == 3
+    assert pm.tree_hops(9) == pm.tree_hops(16) == 4
+    assert pm.tree_hops(17) == 5
+
+
+def test_tree_hops_integer_arithmetic_beats_float_log2():
+    """The motivating miscount: for n just above a large power of two,
+    float log2 rounds DOWN to the power itself and ceil() then loses
+    the final hop. The integer spelling cannot."""
+    n = 2 ** 49 + 1
+    assert math.ceil(math.log2(n)) == 49        # the float lie
+    assert pm.tree_hops(n) == 50                # the padded tree's truth
+    assert pm.tree_hops(2 ** 49) == 49
+
+
+def test_split_lanes_validates_topology():
+    assert pm._split_lanes(16, 4) == 4
+    assert pm._split_lanes(16, 1) == 16
+    with pytest.raises(ValueError, match="lanes=16.*clusters=3"):
+        pm._split_lanes(16, 3)
+    with pytest.raises(ValueError):
+        pm._split_lanes(16, 0)
+    with pytest.raises(ValueError):
+        pm.reduction_cycles(CFG16, 256, clusters=5)
+    with pytest.raises(ValueError):
+        pm.matmul_cycles(CFG16, 64, clusters=3)
+
+
+def test_simulate_timing_validates_and_charges_clusters():
+    """The scoreboard twin: invalid topologies raise; a pure reduction
+    pays strictly more per cluster split (CLUSTER_HOP > RED_HOP, the
+    serial tail always grows); and a pure LOAD gets CHEAPER at moderate
+    clustering — VLSU collection arbitrates over lanes/clusters instead
+    of all lanes, shrinking faster than the hop term grows. That
+    crossover is the AraXL motivation, and why no blanket
+    "flat is cheapest" assertion exists anywhere in this PR."""
+    red = [isa.VSETVL(64, 64), isa.VREDSUM(16, 8)]
+    with pytest.raises(ValueError, match="clusters"):
+        simulate_timing(red, CFG16, vlmax=64, clusters=3)
+    flat = simulate_timing(red, CFG16, vlmax=64, clusters=1).cycles
+    c2 = simulate_timing(red, CFG16, vlmax=64, clusters=2).cycles
+    c4 = simulate_timing(red, CFG16, vlmax=64, clusters=4).cycles
+    assert flat < c2 < c4
+    load = [isa.VSETVL(64, 64), isa.VLD(8, 0)]
+    l_flat = simulate_timing(load, CFG16, vlmax=64, clusters=1).cycles
+    l_c2 = simulate_timing(load, CFG16, vlmax=64, clusters=2).cycles
+    assert l_c2 < l_flat                  # the arbitration win
+
+
+def test_clusters_one_is_the_single_core_model():
+    """clusters=1 must reproduce the pre-cluster closed forms exactly
+    (lpc=lanes, zero hop term) — the golden table's byte-identity in
+    one line per kernel."""
+    for lanes in (2, 16):
+        cfg = AraConfig(lanes=lanes)
+        assert pm.reduction_cycles(cfg, 256, clusters=1) \
+            == pm.reduction_cycles(cfg, 256)
+        assert pm.matmul_cycles(cfg, 128, clusters=1) \
+            == pm.matmul_cycles(cfg, 128)
+
+
+def test_clustered_reduction_tree_is_intra_plus_inter():
+    """The clustered tree decomposes exactly: swapping the flat
+    RED_HOP*hops(lanes) term for RED_HOP*hops(lanes/c) +
+    CLUSTER_HOP*hops(c) reproduces the clustered closed form (single
+    strip, so the substitution is visible in the total)."""
+    cfg = AraConfig(lanes=16)
+    n = 256                               # one strip at vlmax_dp=1024
+    for c in (2, 4, 8, 16):
+        flat = pm.reduction_cycles(cfg, n)
+        want = flat - pm.RED_HOP * pm.tree_hops(16) \
+            + pm.RED_HOP * pm.tree_hops(16 // c) \
+            + pm.CLUSTER_HOP * pm.tree_hops(c)
+        assert pm.reduction_cycles(cfg, n, clusters=c) \
+            == pytest.approx(want, rel=1e-12)
+
+
+def test_make_cluster_mesh_requires_enough_devices():
+    """Host-side validation half: asking for more devices than exist is
+    a ValueError naming the shape (the single-CPU test process has one
+    device, so any 2x2 ask must fail loudly, not wrap around)."""
+    with pytest.raises(ValueError, match="2x2 needs 4 devices"):
+        make_cluster_mesh(2, 2)

@@ -98,6 +98,51 @@ print("LANE_DIFF_OK", checked, "compiles", stats.compiles)
     assert f"LANE_DIFF_OK {per_cell * GRID_COMBOS}" in out
 
 
+@pytest.mark.parametrize("clusters,lpc", [(2, 2), (2, 4), (4, 2)])
+def test_cluster_vs_reference_grid(clusters, lpc):
+    """Nested clusters x lanes-per-cluster ClusterEngine ==
+    ReferenceEngine, BIT-exact (tol=0 under x64), across the full
+    SEW x LMUL grid — the hierarchical psum/pmax reconciliation
+    (intra-cluster fold, then inter-cluster) must be algebraically the
+    flat fold, because per-lane scatter contributions are disjoint.
+
+    Each topology runs in its own subprocess with clusters*lpc fake
+    devices and a FRESH TraceCache, and the whole grid costs exactly
+    one compile per engine (compiles == 2) — the staged step is reused
+    unchanged per lane; only the mesh nesting differs.
+    REPRO_DIFFERENTIAL_LANE_N scales the program count for soaks.
+    """
+    n = max(N_PER_CELL_LANE * GRID_COMBOS,
+            int(os.environ.get("REPRO_DIFFERENTIAL_LANE_N",
+                               N_PER_CELL_LANE * GRID_COMBOS)))
+    per_cell = -(-n // GRID_COMBOS)
+    code = f"""
+import numpy as np, jax, jax.numpy as jnp
+from repro.configs.ara import AraConfig
+from repro.core import staging
+from repro.core.cluster import ClusterEngine
+from repro.core.vector_engine import ReferenceEngine
+from repro.testing import differential as diff
+cfg = AraConfig(lanes=2)
+cache = staging.TraceCache()
+ref = ReferenceEngine(cfg, vlmax=diff.VLMAX64, dtype=jnp.float64,
+                      cache=cache)
+clu = ClusterEngine(cfg, clusters={clusters}, lanes_per_cluster={lpc},
+                    vlmax=diff.VLMAX64, dtype=jnp.float64, cache=cache)
+assert clu.topology == ({clusters}, {lpc}) and clu.lanes == {clusters * lpc}
+tol = {{64: 0, 32: 0, 16: 0, 8: 0}}           # BIT-exact, all widths
+checked = diff.run_cells(
+    diff.engine_batch(ref), diff.engine_batch(clu),
+    diff.cells({per_cell}), n_ops=8, tol=tol,
+    label="cluster-vs-reference-{clusters}x{lpc}")
+assert cache.stats.compiles == 2, cache.stats  # one per engine, grid-wide
+print("CLUSTER_DIFF_OK", checked, "compiles", cache.stats.compiles)
+"""
+    out = run_devices(code, n_devices=clusters * lpc, x64=True,
+                      timeout=600 + 2 * per_cell * GRID_COMBOS)
+    assert f"CLUSTER_DIFF_OK {per_cell * GRID_COMBOS}" in out
+
+
 def test_generator_programs_are_legal_and_diverse():
     """Every legal grid point yields validate_program-clean programs, and
     the op pool respects the vtype: no widening at SEW=64 or LMUL=8, no

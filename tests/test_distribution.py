@@ -29,6 +29,79 @@ print("CHAIN_OK")
     assert "CHAIN_OK" in run_devices(code, n_devices=4)
 
 
+def test_chaining_shapes_divisible_and_ragged():
+    """The ring collectives' shape contract, both sides:
+
+    - every divisible (m, k, n, group) combination matches the
+      single-device ``jnp.dot`` oracle — including the grouped
+      steady-state path (group > 1), whose ring-step carry indexing is
+      exactly the part a refactor would silently break;
+    - every ragged shape raises ``ValueError`` naming the offending
+      dimension UP FRONT (all_gather's m, the group divisibility,
+      reduce-scatter's k and m, contraction mismatches) instead of the
+      old behavior: a cryptic shard_map error deep inside the scan, a
+      bare ``AssertionError``, or — worst — reduce-scatter silently
+      DROPPING the trailing m % n_dev rows of the product."""
+    code = """
+import jax, numpy as np, jax.numpy as jnp
+from repro.launch.mesh import make_mesh
+from repro.core.chaining import all_gather_matmul, matmul_reduce_scatter
+mesh = make_mesh(1, 4)
+rng = np.random.RandomState(0)
+
+# divisible sweep: (m, k, n) x group, grouped path vs the dot oracle
+for m, k, n in ((8, 16, 12), (4, 8, 8), (16, 12, 4)):
+    x = jnp.asarray(rng.randn(m, k), jnp.float32)
+    w = jnp.asarray(rng.randn(k, n), jnp.float32)
+    want = np.asarray(x) @ np.asarray(w)
+    for group in (1, 2, 4):
+        y = all_gather_matmul(x, w, mesh, "model", group=group)
+        np.testing.assert_allclose(np.asarray(y), want,
+                                   rtol=1e-4, atol=1e-4)
+    y2 = matmul_reduce_scatter(x, w, mesh, "model")
+    np.testing.assert_allclose(np.asarray(y2), want, rtol=1e-4, atol=1e-4)
+    print(f"DIVISIBLE_OK {m}x{k}x{n}")
+
+# ragged shapes: ValueError NAMING the dimension, raised before any
+# device computation
+def expect_raises(fn, *needles):
+    try:
+        fn()
+    except ValueError as e:
+        msg = str(e)
+        for needle in needles:
+            assert needle in msg, (needle, msg)
+        return
+    raise AssertionError(f"no ValueError for {needles}")
+
+x10 = jnp.asarray(rng.randn(10, 16), jnp.float32)   # m=10 % 4 != 0
+w = jnp.asarray(rng.randn(16, 12), jnp.float32)
+expect_raises(lambda: all_gather_matmul(x10, w, mesh, "model"),
+              "m=10", "mesh axis 'model' size=4")
+x8 = jnp.asarray(rng.randn(8, 16), jnp.float32)
+expect_raises(lambda: all_gather_matmul(x8, w, mesh, "model", group=3),
+              "n_dev=4", "group=3")
+xk = jnp.asarray(rng.randn(8, 10), jnp.float32)     # k=10 % 4 != 0
+wk = jnp.asarray(rng.randn(10, 12), jnp.float32)
+expect_raises(lambda: matmul_reduce_scatter(xk, wk, mesh, "model"),
+              "k=10", "mesh axis 'model' size=4")
+expect_raises(lambda: matmul_reduce_scatter(x10, w, mesh, "model"),
+              "m=10")                               # the silent-drop bug
+expect_raises(lambda: all_gather_matmul(x8, jnp.zeros((8, 4)),
+                                        mesh, "model"),
+              "contraction mismatch")
+expect_raises(lambda: matmul_reduce_scatter(x8, jnp.zeros((8, 4)),
+                                            mesh, "model"),
+              "contraction mismatch")
+print("RAGGED_OK")
+"""
+    out = run_devices(code, n_devices=4, timeout=600)
+    assert "DIVISIBLE_OK 8x16x12" in out
+    assert "DIVISIBLE_OK 4x8x8" in out
+    assert "DIVISIBLE_OK 16x12x4" in out
+    assert "RAGGED_OK" in out
+
+
 def test_sharded_train_step_matches_single_device():
     """Same seed, same batch: loss on a 2x2 mesh == single device."""
     code = """

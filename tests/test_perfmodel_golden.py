@@ -28,6 +28,11 @@ GOLDEN = os.path.join(os.path.dirname(os.path.abspath(__file__)), "golden",
 LANES = (2, 4, 8, 16)
 SIZES = (16, 32, 64, 128, 256)       # Fig. 5 problem sizes
 DAXPY_N = 256                        # §V-B size
+NONPOW2_LANES = (6, 12)              # padded-tree witnesses: a non-pow2
+                                     # lane count pays the NEXT pow2's
+                                     # reduction depth (tree_hops)
+CLUSTERS = (2, 4)                    # AraXL cluster shapes for the new
+                                     # .../cN topology keys
 
 
 def compute_table():
@@ -49,6 +54,26 @@ def compute_table():
             key = f"vred/l{lanes}/n{DAXPY_N}/sew{sew}/{lm}"
             table[key] = pm.reduction_cycles(cfg, DAXPY_N, ew_bits=sew,
                                              lmul=lmul)
+    # non-power-of-two lane counts: pins the padded-tree depth (the old
+    # float ceil(log2) spelling agreed with tree_hops exactly at the
+    # pow2 lane counts above, so every pre-existing key stays
+    # byte-identical; these rows are where the two could diverge)
+    for lanes in NONPOW2_LANES:
+        cfg = AraConfig(lanes=lanes)
+        table[f"vred/l{lanes}/n{DAXPY_N}/sew64/m1"] = \
+            pm.reduction_cycles(cfg, DAXPY_N)
+        table[f"matmul/l{lanes}/n256/sew64/m1"] = pm.matmul_cycles(cfg, 256)
+    # clustered topology (AraXL): the CLUSTER_HOP interconnect term and
+    # the per-cluster VLSU arbitration split, pinned at SEW=64/m1
+    for lanes in LANES:
+        cfg = AraConfig(lanes=lanes)
+        for c in CLUSTERS:
+            if lanes % c:
+                continue
+            table[f"vred/l{lanes}/c{c}/n{DAXPY_N}/sew64/m1"] = \
+                pm.reduction_cycles(cfg, DAXPY_N, clusters=c)
+            table[f"matmul/l{lanes}/c{c}/n256/sew64/m1"] = \
+                pm.matmul_cycles(cfg, 256, clusters=c)
     return table
 
 
@@ -88,6 +113,35 @@ def test_golden_table_encodes_lmul_amortization():
             else:
                 assert c[4] == c[1], (sew, lanes, c)
                 assert c[8] > c[1], (sew, lanes, c)   # over-grouping costs
+
+
+def test_golden_table_pins_padded_tree_and_cluster_hop():
+    """The new keys witness the topology contracts directly in the
+    checked-in numbers: (1) a non-pow2 lane count pays the NEXT power of
+    two's reduction-tree depth — lanes=6 and lanes=8 charge the same
+    tree term, so their vred difference is exactly the per-lane
+    element/memory delta, never a cheaper tree; (2) a clustered
+    reduction is strictly dearer than the flat one at the same lane
+    count (CLUSTER_HOP > RED_HOP: the serial tail cannot be clustered
+    away)."""
+    with open(GOLDEN) as f:
+        want = json.load(f)
+    assert pm.tree_hops(6) == pm.tree_hops(8) == 3
+    assert pm.tree_hops(12) == pm.tree_hops(16) == 4
+    # reconstruct lanes=6's vred from lanes=8's by swapping only the
+    # per-lane terms (fold elements e = n/lanes, memory 8n/(4*lanes)) —
+    # the checked-in pair must then agree EXACTLY, i.e. share the tree
+    for a, b in ((6, 8), (12, 16)):
+        def per_lane(lanes):
+            return DAXPY_N / lanes + 8.0 * DAXPY_N / (4.0 * lanes)
+        got = want[f"vred/l{a}/n{DAXPY_N}/sew64/m1"]
+        base = want[f"vred/l{b}/n{DAXPY_N}/sew64/m1"] - per_lane(b)
+        assert got == pytest.approx(base + per_lane(a), rel=1e-12)
+    for lanes in LANES:
+        for c in CLUSTERS:
+            key = f"vred/l{lanes}/c{c}/n{DAXPY_N}/sew64/m1"
+            if key in want:
+                assert want[key] > want[f"vred/l{lanes}/n{DAXPY_N}/sew64/m1"]
 
 
 def test_golden_table_fractional_lmul_is_honest():

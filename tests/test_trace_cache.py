@@ -175,6 +175,54 @@ def test_vxsat_does_not_leak_across_batched_programs():
     assert float(srs3[0][isa.VXSAT_SREG]) == 0.0
 
 
+def test_equal_lane_count_topologies_do_not_share_signatures():
+    """Mesh topology is signature material, not just the lane COUNT: a
+    flat 4-lane mesh, a 2x2 cluster grid and a 4x1 cluster grid all run
+    4 lanes, but their reconciliation nesting differs — replaying one
+    topology's compiled executable for another would be a miscompile
+    (the old signature keyed on lane count alone and would have HIT).
+    The signature now carries ``clusters`` plus the full mesh
+    fingerprint (axis names, per-axis sizes, device order), so every
+    pair below misses the others' cache entries. Subprocess: the mesh
+    shapes need fake XLA devices, which must exist before jax wakes."""
+    from conftest import run_devices
+    code = """
+import numpy as np, jax, jax.numpy as jnp
+from repro.configs.ara import AraConfig
+from repro.core import isa, staging
+from repro.core.cluster import ClusterEngine, make_cluster_mesh
+from repro.core.vector_engine import LaneEngine
+cfg = AraConfig(lanes=2)
+cache = staging.TraceCache()
+flat = LaneEngine(cfg, jax.sharding.Mesh(np.array(jax.devices()[:4]),
+                                         ("lanes",)),
+                  vlmax=8, dtype=jnp.float32, cache=cache)
+grid22 = ClusterEngine(cfg, clusters=2, lanes_per_cluster=2,
+                       vlmax=8, dtype=jnp.float32, cache=cache)
+grid41 = ClusterEngine(cfg, clusters=4, lanes_per_cluster=1,
+                       vlmax=8, dtype=jnp.float32, cache=cache)
+sigs = [e.signature(window=8, mem_words=64, prog_len=8, batch=1)
+        for e in (flat, grid22, grid41)]
+assert len(set(sigs)) == 3, sigs        # pairwise distinct keys
+assert all(s.lanes == 4 for s in sigs)  # same TOTAL lane count
+mem = np.arange(64, dtype=float)
+prog = [isa.VSETVL(8, 32, 2), isa.VLD(0, 0), isa.VFMUL(0, 0, 0),
+        isa.VST(0, 40)]
+outs = [e.run(prog, mem)[0] for e in (flat, grid22, grid41)]
+st = cache.stats
+assert st.compiles == 3 and st.misses == 3 and st.hits == 0, st
+flat.run(prog, mem)                     # same topology again: a HIT,
+assert cache.stats.hits == 1            # so the misses above were real
+assert np.array_equal(outs[0], outs[1]) and np.array_equal(outs[0], outs[2])
+mesh2 = make_cluster_mesh(2, 2)         # key is the topology, not the
+assert staging.mesh_fingerprint(mesh2, ("clusters", "lanes")) \\
+    == grid22.mesh_key                  # Mesh object's identity
+print("TOPOLOGY_KEYS_OK")
+"""
+    out = run_devices(code, n_devices=4, x64=False, timeout=600)
+    assert "TOPOLOGY_KEYS_OK" in out
+
+
 def test_lru_evicts_oldest():
     cache = staging.TraceCache(maxsize=2)
     eng = _engine(cache=cache)
