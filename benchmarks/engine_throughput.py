@@ -19,7 +19,11 @@ under ``int8_cells``, so the integer-lane rows of the differential grid
 are tracked alongside, and a third sweep runs a mask/compare/reduction-
 heavy op mix over sampled vtype corners under ``mask_cells`` (PR 6: vm
 and the new op classes are data, not structure, so these must hold the
-same one-signature throughput). Results land in ``BENCH_engines.json``
+same one-signature throughput). A ``lint_overhead`` section re-runs the
+batched path with the encode-time static analyzer enabled
+(``ReferenceEngine(lint=True)``) and asserts the compile counter does
+not move — linting is host python and must be invisible to XLA — while
+recording its per-program cost. Results land in ``BENCH_engines.json``
 (CI uploads it as an artifact) and print as
 ``engine_throughput,key=value,...`` lines.
 
@@ -105,6 +109,34 @@ def bench(n=24, sew=32, lmul=2, uncached_n=3, reps=3):
     batched = _rate(n * reps, time.perf_counter() - t0, stats.compiles)
     batched["compile_seconds_first_call"] = round(compile_s, 4)
 
+    # 4. lint-pass overhead: run_many with the encode-time static
+    # analyzer (core/analysis.py) enabled, on the SAME warm cache. The
+    # linter is pure host python, so the compile counter must not move —
+    # asserted here, and the delta vs cached_batched is the recorded
+    # cost of linting every program before execution.
+    from repro.core import analysis
+    lint_eng = ReferenceEngine(AraConfig(lanes=2), vlmax=diff.VLMAX64,
+                               dtype=jnp.float32, cache=eng.cache,
+                               lint=True)
+    compiles_before = stats.compiles
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        lint_eng.run_many(progs, mems, [dict(s) for s in srs], window=win)
+    linted = _rate(n * reps, time.perf_counter() - t0, stats.compiles)
+    assert stats.compiles == compiles_before, (
+        f"lint pass changed the compile count: {compiles_before} -> "
+        f"{stats.compiles}")
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        for p, m in zip(progs, mems):
+            analysis.lint_program(p, diff.VLMAX64, mem_words=m.size)
+    lint_only_s = time.perf_counter() - t0
+    linted["lint_only_ms_per_program"] = round(
+        1000.0 * lint_only_s / (n * reps), 4)
+    linted["overhead_vs_cached_batched_pct"] = round(
+        100.0 * max(batched["programs_per_sec"]
+                    / max(linted["programs_per_sec"], 1e-9) - 1.0, 0.0), 1)
+
     # SEW=8 cells: one batched run_many per legal lmul at the grid-wide
     # window, so every cell hits the one cached signature (the integer
     # lane rides the same compiled executable as the float grid)
@@ -146,6 +178,7 @@ def bench(n=24, sew=32, lmul=2, uncached_n=3, reps=3):
         "uncached": uncached,
         "cached": cached,
         "cached_batched": batched,
+        "lint_overhead": linted,
         "int8_cells": int8_cells,
         "mask_cells": mask_cells,
         "speedup_cached_batched_vs_uncached": round(
@@ -168,7 +201,7 @@ def main():
 
     res = bench(n=args.n, sew=args.sew, lmul=args.lmul,
                 uncached_n=args.uncached_n)
-    for path in ("uncached", "cached", "cached_batched"):
+    for path in ("uncached", "cached", "cached_batched", "lint_overhead"):
         row = {"path": path, **res[path]}
         print("engine_throughput," +
               ",".join(f"{k}={v}" for k, v in row.items()), flush=True)

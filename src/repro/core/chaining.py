@@ -9,8 +9,6 @@ collective-bound cells.
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as PS

@@ -84,7 +84,8 @@ class ClusterEngine(_StagedEngine):
                  axes: Sequence[str] = CLUSTER_AXES,
                  vlmax: Optional[int] = None, dtype=jnp.float32,
                  cache: Optional[staging.TraceCache] = None,
-                 devices: Optional[Sequence] = None):
+                 devices: Optional[Sequence] = None,
+                 lint: bool = False):
         if mesh is None:
             mesh = make_cluster_mesh(clusters, lanes_per_cluster,
                                      devices=devices, axes=axes)
@@ -96,7 +97,7 @@ class ClusterEngine(_StagedEngine):
         self.mesh_key = staging.mesh_fingerprint(mesh, self.axes)
         vlmax = vlmax or cfg.vlmax_dp
         super().__init__(cfg, (vlmax // self.lanes) * self.lanes,
-                         dtype=dtype, cache=cache)
+                         dtype=dtype, cache=cache, lint=lint)
 
     @property
     def topology(self):

@@ -146,6 +146,59 @@ VXSAT_SREG = 31                  # scalar reg shadowing the sticky vxsat CSR
 MASK_REG = 0                     # v0: the one architectural mask register
 
 
+class IllegalInstruction(ValueError):
+    """Structured legality error — one diagnostic format for every
+    rejection path: ``check_insn``, the engines' encode pre-pass
+    (``staging.resolve_vtype``), the scoreboard, and the static analyzer
+    (``core/analysis.py``, which wraps these as lint code E101).
+
+    Attributes:
+      code      short kebab-case rule id (``"negative-avl"``, ``"elen"``,
+                ``"class-gate"``, ``"misaligned"``, ``"bounds"``,
+                ``"emul"``, ``"nf-span"``, ``"widen-overlap"``,
+                ``"narrow-overlap"``, ``"v0-overlap"``, ``"bad-sew"``,
+                ``"bad-lmul"``)
+      detail    the human-readable rule text (LMUL always spelled
+                mf2/mf4/m1..m8, never a decimal)
+      mnemonic  instruction class name, when known
+      sew/lmul  the vtype in effect at the faulting instruction
+      index     position in the program, when the caller threads it
+    """
+
+    def __init__(self, code: str, detail: str, *, mnemonic=None,
+                 sew=None, lmul=None, index=None):
+        super().__init__(detail)
+        self.code = code
+        self.detail = detail
+        self.mnemonic = mnemonic
+        self.sew = sew
+        self.lmul = lmul
+        self.index = index
+
+    def with_context(self, *, mnemonic=None, sew=None, lmul=None,
+                     index=None):
+        """Fill in still-unknown fields (never overwrites) and return self
+        — used by ``check_insn`` / ``resolve_vtype`` to thread the
+        instruction index and vtype into errors raised deeper down."""
+        if self.mnemonic is None:
+            self.mnemonic = mnemonic
+        if self.sew is None:
+            self.sew = sew
+        if self.lmul is None:
+            self.lmul = lmul
+        if self.index is None:
+            self.index = index
+        return self
+
+    def __str__(self):
+        where = "" if self.index is None else f" at insn {self.index}"
+        who = "" if self.mnemonic is None else f" {self.mnemonic}"
+        vt = ""
+        if self.sew is not None:
+            vt = f" [e{self.sew}/{format_lmul(self.lmul or 1)}]"
+        return f"[{self.code}]{where}{who}{vt}: {self.detail}"
+
+
 def parse_lmul(text):
     """Parse an LMUL spelling: ``"mf2"``/``"mf4"``/``"m2"``/``"2"``/2/0.5.
 
@@ -640,11 +693,13 @@ _REDUCTIONS = (VREDSUM, VREDMAX, VREDMIN, VFWREDSUM)
 
 def check_vtype(sew: int, lmul=1):
     if sew not in SEWS:
-        raise ValueError(f"unsupported SEW {sew}")
+        raise IllegalInstruction("bad-sew", f"unsupported SEW {sew}")
     if lmul not in LMULS:
-        raise ValueError(f"unsupported LMUL {format_lmul(lmul)}")
+        raise IllegalInstruction(
+            "bad-lmul", f"unsupported LMUL {format_lmul(lmul)}")
     if Fraction(sew) / Fraction(lmul) > ELEN:
-        raise ValueError(
+        raise IllegalInstruction(
+            "elen",
             f"SEW={sew} at LMUL={format_lmul(lmul)} illegal: "
             f"SEW/LMUL exceeds ELEN={ELEN}")
 
@@ -665,10 +720,12 @@ def legal_vtypes(sews=SEWS, lmuls=LMULS):
 
 def _check_group(base: int, span: int, what: str):
     if base % span:
-        raise ValueError(
+        raise IllegalInstruction(
+            "misaligned",
             f"{what}: register v{base} not aligned to group span {span}")
     if base < 0 or base + span > NUM_VREGS:
-        raise ValueError(
+        raise IllegalInstruction(
+            "bounds",
             f"{what}: group v{base}..v{base + span - 1} exceeds the "
             f"{NUM_VREGS}-register file")
 
@@ -708,8 +765,9 @@ def _overlaps(a, b):
     return a[0] < b[0] + b[1] and b[0] < a[0] + a[1]
 
 
-def check_insn(ins, sew: int, lmul=1):
-    """Raise ValueError if ``ins`` is illegal at the current vtype.
+def check_insn(ins, sew: int, lmul=1, index=None):
+    """Raise :class:`IllegalInstruction` (a ValueError) if ``ins`` is
+    illegal at the current vtype.
 
     Encodes the RVV 1.0 rules the module docstring describes: group
     alignment, the widening EMUL=2*LMUL reservation and its source-overlap
@@ -718,52 +776,75 @@ def check_insn(ins, sew: int, lmul=1):
     overlap exception, the segment-op ``nf * lmul <= 8`` span limit, and
     the op-class SEW gates: float ops need a float format (SEW >= 16),
     integer/fixed-point ops an exactly-representable width (SEW <= 32).
+
+    ``index`` (optional) is the instruction's position in its program;
+    callers that walk whole programs thread it so every rejection carries
+    ``(code, mnemonic, sew, lmul, index)`` — the same diagnostic shape
+    lint findings use.
     """
+    try:
+        _check_insn(ins, sew, lmul)
+    except IllegalInstruction as e:
+        raise e.with_context(mnemonic=type(ins).__name__, sew=sew,
+                             lmul=lmul, index=index) from None
+
+
+def _check_insn(ins, sew: int, lmul=1):
     t = type(ins)
     name = t.__name__
     if t is VSETVL:
         if ins.vl < 0:
-            raise ValueError(f"VSETVL: negative AVL {ins.vl}")
+            raise IllegalInstruction(
+                "negative-avl", f"VSETVL: negative AVL {ins.vl}")
         check_vtype(ins.sew, ins.lmul)
         return
     span = group_span(lmul)
     wspan = group_span(2 * Fraction(lmul))
     if t in _INT_CMP and sew not in INT_SEWS:
-        raise ValueError(
+        raise IllegalInstruction(
+            "class-gate",
             f"{name} illegal at SEW={sew} (integer compares share the "
             f"integer class gate: SEW in {INT_SEWS})")
     if t in _FP_CMP and sew not in FP_SEWS:
-        raise ValueError(
+        raise IllegalInstruction(
+            "class-gate",
             f"{name} illegal at SEW={sew} (float compares need a float "
             f"format: SEW in {FP_SEWS})")
     if t is VFWREDSUM:
         if sew not in FP_SEWS:
-            raise ValueError(
+            raise IllegalInstruction(
+                "class-gate",
                 f"VFWREDSUM illegal at SEW={sew} (float reduction needs a "
                 f"float format)")
         if sew == max(SEWS):
-            raise ValueError(
+            raise IllegalInstruction(
+                "elen",
                 f"VFWREDSUM illegal at SEW={sew} (2*SEW exceeds ELEN=64)")
     if t in _FP_OPS and sew not in FP_SEWS:
-        raise ValueError(
+        raise IllegalInstruction(
+            "class-gate",
             f"{name} illegal at SEW={sew} (no FP8 format: float ops need "
             f"SEW in {FP_SEWS})")
     if t in _INT_OPS and sew not in INT_SEWS:
-        raise ValueError(
+        raise IllegalInstruction(
+            "class-gate",
             f"{name} illegal at SEW={sew} (integer ops model int8/16/32 "
             f"sub-words; int64 would not round-trip the engines' float "
             f"storage)")
     if t in _WIDENING_OPS or t is VFNCVT:
         if sew == max(SEWS):
-            raise ValueError(
+            raise IllegalInstruction(
+                "elen",
                 f"{name} illegal at SEW={sew} (2*SEW exceeds ELEN=64)")
         if 2 * Fraction(lmul) > max(LMULS):
-            raise ValueError(
+            raise IllegalInstruction(
+                "emul",
                 f"{name} illegal at LMUL={format_lmul(lmul)} "
                 f"(EMUL=2*LMUL exceeds {max(LMULS)})")
     if t in (VLSEG, VSSEG):
         if ins.nf < 1 or ins.nf * Fraction(lmul) > max(LMULS):
-            raise ValueError(
+            raise IllegalInstruction(
+                "nf-span",
                 f"{name}: nf={ins.nf} illegal at LMUL={format_lmul(lmul)} "
                 f"(need 1 <= nf*lmul <= {max(LMULS)})")
     reads, writes = reg_groups(ins, lmul)
@@ -773,13 +854,15 @@ def check_insn(ins, sew: int, lmul=1):
         dst = (ins.vd, wspan)
         for src in ((ins.va, span), (ins.vb, span)):
             if _overlaps(dst, src):
-                raise ValueError(
+                raise IllegalInstruction(
+                    "widen-overlap",
                     f"{name}: wide destination v{ins.vd} (span {wspan}) "
                     f"overlaps narrow source v{src[0]}")
     if t is VFNCVT:
         dst, src = (ins.vd, span), (ins.vs, wspan)
         if _overlaps(dst, src) and ins.vd != ins.vs:
-            raise ValueError(
+            raise IllegalInstruction(
+                "narrow-overlap",
                 f"VFNCVT: destination v{ins.vd} overlaps wide source "
                 f"v{ins.vs} outside the lowest-numbered position")
     if (getattr(ins, "vm", 1) == 0 or t is VMERGE) \
@@ -787,7 +870,8 @@ def check_insn(ins, sew: int, lmul=1):
         mask_grp = (MASK_REG, span)
         for base, sp in writes:
             if _overlaps((base, sp), mask_grp):
-                raise ValueError(
+                raise IllegalInstruction(
+                    "v0-overlap",
                     f"{name}: masked destination v{base} overlaps the v0 "
                     f"mask group (RVV 1.0 v0-overlap rule: only mask "
                     f"writers and reduction scalars may)")
@@ -796,8 +880,8 @@ def check_insn(ins, sew: int, lmul=1):
 def validate_program(program):
     """Statically check a whole program; returns it unchanged if legal."""
     sew, lmul = max(SEWS), 1
-    for ins in program:
-        check_insn(ins, sew, lmul)
+    for i, ins in enumerate(program):
+        check_insn(ins, sew, lmul, index=i)
         if type(ins) is VSETVL:
             sew, lmul = ins.sew, ins.lmul
     return program

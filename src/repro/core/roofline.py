@@ -14,7 +14,7 @@ import dataclasses
 from typing import Optional
 
 from repro.configs.base import ArchConfig, ShapeConfig
-from repro.core.hlo_analysis import HLOStats, analyze
+from repro.core.hlo_analysis import analyze
 
 # TPU v5e (assignment constants)
 PEAK_FLOPS_BF16 = 197e12      # per chip

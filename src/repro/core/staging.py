@@ -118,18 +118,31 @@ def bucket_pow2(n: int, lo: int = 64) -> int:
 # ---------------------------------------------------------------------------
 
 
-def resolve_vtype(program, vlmax64: int):
+def resolve_vtype(program, vlmax64: int, lint: bool = False,
+                  mem_words=None):
     """Legality-check a program once and resolve its per-insn vtype.
 
     Returns ``[(ins, vl, sew, lmul), ...]`` with VSETVL rows carrying the
-    vtype they establish. Raises ``ValueError`` on the first illegal
+    vtype they establish. Raises ``isa.IllegalInstruction`` (a
+    ValueError carrying code/mnemonic/vtype/index) on the first illegal
     instruction — on the host, before anything is traced or executed;
     both engines and ``simulate_timing`` run this exact pre-pass.
+
+    ``lint=True`` additionally runs the whole-program static analyzer
+    (``core/analysis.py``) first and raises ``analysis.LintError`` on any
+    E-class finding (def-before-use, wide-group clobber, v0 clobber,
+    static OOB footprints when ``mem_words`` is given). The lint pass is
+    pure host python — it never touches the trace cache or changes what
+    XLA compiles, so enabling it keeps the differential grid's
+    compiles == 2 contract intact.
     """
+    if lint:
+        from repro.core import analysis
+        analysis.assert_clean(program, vlmax64, mem_words=mem_words)
     out = []
     vl, sew, lmul = vlmax64, 64, 1
-    for ins in program:
-        isa.check_insn(ins, sew, lmul)
+    for i, ins in enumerate(program):
+        isa.check_insn(ins, sew, lmul, index=i)
         if type(ins) is isa.VSETVL:
             sew, lmul = ins.sew, ins.lmul
             vl = isa.vsetvl_grant(ins.vl, vlmax64, sew, lmul)

@@ -19,7 +19,6 @@ lets one binary run on any lane count. Our analogues:
 """
 from __future__ import annotations
 
-import functools
 from fractions import Fraction
 
 import jax

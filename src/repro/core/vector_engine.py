@@ -116,11 +116,17 @@ class _StagedEngine:
     mesh_key = ()
 
     def __init__(self, cfg: AraConfig, vlmax: Optional[int] = None,
-                 dtype=jnp.float64, cache: Optional[staging.TraceCache] = None):
+                 dtype=jnp.float64, cache: Optional[staging.TraceCache] = None,
+                 lint: bool = False):
         self.cfg = cfg
         self.vlmax64 = vlmax or cfg.vlmax_dp
         self.dtype = dtype
         self.cache = cache if cache is not None else staging.TRACE_CACHE
+        # opt-in encode-time static analysis (core/analysis.py): rejects
+        # whole-program hazards (def-before-use, wide/v0 clobbers, static
+        # OOB footprints) before anything reaches the device. Host-only:
+        # it cannot perturb the trace cache or the compile count.
+        self.lint = lint
 
     # Back-compat alias: the 64-bit VLMAX the engine was sized for.
     @property
@@ -169,6 +175,12 @@ class _StagedEngine:
             raise ValueError("run_many: len(programs) != len(memories)")
         sregs = list(sregs) if sregs is not None else [None] * n
         storage = self._storage
+
+        if self.lint:
+            from repro.core import analysis
+            for p, m in zip(programs, memories):
+                analysis.assert_clean(p, self.vlmax64,
+                                      mem_words=int(np.size(m)))
 
         rows = staging.pack_tables(
             [staging.encode_program(p, self.vlmax64) for p in programs])
@@ -223,7 +235,8 @@ class LaneEngine(_StagedEngine):
 
     def __init__(self, cfg: AraConfig, mesh, axis: str = "lanes",
                  vlmax: Optional[int] = None, dtype=jnp.float32,
-                 cache: Optional[staging.TraceCache] = None):
+                 cache: Optional[staging.TraceCache] = None,
+                 lint: bool = False):
         self.mesh = mesh
         self.axis = axis
         self.lanes = mesh.shape[axis]
@@ -233,7 +246,7 @@ class LaneEngine(_StagedEngine):
         self.mesh_key = staging.mesh_fingerprint(mesh, (axis,))
         vlmax = vlmax or cfg.vlmax_dp
         super().__init__(cfg, (vlmax // self.lanes) * self.lanes,
-                         dtype=dtype, cache=cache)
+                         dtype=dtype, cache=cache, lint=lint)
 
 
 # ---------------------------------------------------------------------------

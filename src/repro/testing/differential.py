@@ -45,7 +45,7 @@ from typing import Callable, Iterable, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core import isa
+from repro.core import analysis, isa
 
 # SEW -> the rounding format: float formats for the FPU widths, int8
 # two's complement for the integer lane (no FP8 format exists)
@@ -208,9 +208,9 @@ def numpy_oracle(program, memory, vlmax64: int, sregs: Optional[dict] = None,
     def q(x, bits):
         return quantize(x, bits, storage)
 
-    for ins in program:
+    for insn_index, ins in enumerate(program):
         t = type(ins)
-        isa.check_insn(ins, sew, lmul)
+        isa.check_insn(ins, sew, lmul, index=insn_index)
         vpr = vlmax64 * (64 // sew)          # per-register capacity
         span = isa.group_span(lmul)
 
@@ -372,8 +372,17 @@ def random_program(r: np.random.RandomState, sew: int = 64, lmul=1,
     Masking: v0 is seeded from a memory pattern (random 0/1, or the
     all-ones/all-zeros edges), maskable ops draw vm=0 half the time, and
     compare/logical destinations often target v0 so the live mask
-    evolves mid-program. The leading VSETVL carries the raw AVL REQUEST
-    (including the vl=0 and over-ask edges); executors must apply
+    evolves mid-program. The program is **lint-clean by construction**
+    (zero E-class ``core/analysis.py`` findings, asserted per program by
+    ``run_cells``): a full-VLMAX prelude seeds EVERY work group, the
+    index group and the v0 mask before the body's vtype takes effect, so
+    no read window ever touches an undefined register even on the vl=0
+    and over-ask edges; widening destinations track their live reserved
+    spans and later destination picks avoid them (no wide-clobber); and
+    segment-store bases are restricted to fully-seeded field spans. The
+    AVL REQUEST (including the vl=0 and over-ask edges) rides the
+    SECOND VSETVL — the one that ends the prelude; use
+    :func:`avl_request` to recover it. Executors must apply
     ``isa.vsetvl_grant``. A dump epilogue re-vsetvls to the full vlmax
     and stores the v0 + work groups into the high half of memory so
     register TAILS (mask/tail-undisturbed leftovers) are part of the
@@ -414,8 +423,43 @@ def random_program(r: np.random.RandomState, sew: int = 64, lmul=1,
     wide_bases = [b for b in range(wspan, isa.NUM_VREGS - wspan + 1,
                                    wspan)]
 
+    # lint-cleanliness bookkeeping (register granularity, mirroring
+    # core/analysis.py): the prelude below seeds v0, the index group and
+    # every work group at FULL vlmax, so their whole spans are defined;
+    # body writes can only extend this (segment fields, wide windows).
+    # ``live`` maps a live wide group's base to its reserved span —
+    # destination picks must avoid those registers (lint E103).
+    defined = set(range(span)) | set(range(idx_grp, idx_grp + span))
+    for b in work:
+        defined.update(range(b, b + span))
+    live: dict = {}
+
+    def live_regs():
+        return {x for b, ws in live.items() for x in range(b, b + ws)}
+
+    vpr = vlmax64 * (64 // sew)               # per-register capacity
+
+    def awin(sp: int) -> int:
+        """analysis.py's access window: registers a vl-element access at
+        the BODY vtype actually touches (0 when the body is vl=0 — the
+        linter W202-skips those ops, so nothing needs tracking)."""
+        return min(sp, -(-vl // vpr)) if vl else 0
+
     def reg():
+        """Source pick: any work group (fully seeded by the prelude)."""
         return work[r.randint(len(work))]
+
+    def dst(regs_needed: int = 0):
+        """Destination pick: a work group avoiding every live wide
+        group's reserved span (writing there is lint E103). ``None``
+        when wide liveness has crowded out every candidate (the caller
+        skips the op; padding keeps program length vtype-independent)."""
+        lv = live_regs()
+        need = regs_needed or span
+        cands = [b for b in work if not (set(range(b, b + need)) & lv)]
+        if not cands:
+            return None
+        return cands[r.randint(len(cands))]
 
     def mreg():
         """Mask-logical source: usually v0, sometimes a work group."""
@@ -423,16 +467,27 @@ def random_program(r: np.random.RandomState, sew: int = 64, lmul=1,
 
     def mdst():
         """Mask-writer dest: v0 often (so later masked ops see it)."""
-        return isa.MASK_REG if r.rand() < 0.4 else reg()
+        if r.rand() < 0.4:
+            return isa.MASK_REG
+        return dst()
 
     def vm():
         """The vm operand: masked-by-v0 half the time."""
         return 0 if r.rand() < 0.5 else 1
 
-    def wide_pair():
-        """(wide dest, two sources outside its reserved span)."""
+    def wide_pair(rw: bool):
+        """(wide dest, two sources outside its reserved span). An ``rw``
+        accumulator (VFWMA) also READS its wide window, so that window
+        must already be defined; either way the dest must not clobber a
+        DIFFERENT live wide span (same-base redefinition is fine)."""
+        lv = live_regs()
         for _ in range(32):
             d = wide_bases[r.randint(len(wide_bases))]
+            dspan = set(range(d, d + wspan))
+            if (dspan & lv) and d not in live:
+                continue                 # overlaps another live group
+            if rw and not set(range(d, d + awin(wspan))) <= defined:
+                continue                 # accumulator window unseeded
             free = [b for b in work if b + span <= d or b >= d + wspan]
             if len(free) >= 1:
                 return d, free[r.randint(len(free))], \
@@ -451,11 +506,16 @@ def random_program(r: np.random.RandomState, sew: int = 64, lmul=1,
         pat = r.randint(0, 2, vlmax).astype(float)
     mem[int_region:int_region + vlmax] = pat
 
-    prog = [isa.VSETVL(req, sew, lmul), isa.VLD(idx_grp, 0),
+    # prelude: seed EVERY work group, the index group and the v0 mask at
+    # the FULL vlmax — whole spans defined — *before* the body's AVL
+    # request takes effect, so no read window ever touches an undefined
+    # register even on the vl=0 / over-ask edges (lint E102)
+    prog = [isa.VSETVL(vlmax, sew, lmul), isa.VLD(idx_grp, 0),
             isa.VLD(isa.MASK_REG, int_region)]
-    for vr in work[:4]:                       # seed a few live registers
+    for vr in work:
         prog.append(isa.VLD(vr, int(r.randint(int_region,
-                                              dump_base - max(vl, 1)))))
+                                              dump_base - vlmax))))
+    prog.append(isa.VSETVL(req, sew, lmul))   # the body's AVL request
     pool = [op for op in ops]
     if sew not in isa.FP_SEWS:                # SEW=8: integer lane only
         pool = [op for op in pool if op not in FP_POOL
@@ -483,40 +543,82 @@ def random_program(r: np.random.RandomState, sew: int = 64, lmul=1,
     for _ in range(n_ops):
         op = pool[r.randint(len(pool))]
         if op == "vfma":
-            prog.append(isa.VFMA(reg(), reg(), reg(), vm=vm()))
+            d = dst()
+            if d is None:
+                continue
+            prog.append(isa.VFMA(d, reg(), reg(), vm=vm()))
         elif op == "vfma_vs":
-            prog.append(isa.VFMA_VS(reg(), 0, reg(), vm=vm()))
+            d = dst()
+            if d is None:
+                continue
+            prog.append(isa.VFMA_VS(d, 0, reg(), vm=vm()))
         elif op == "vfadd":
-            prog.append(isa.VFADD(reg(), reg(), reg(), vm=vm()))
+            d = dst()
+            if d is None:
+                continue
+            prog.append(isa.VFADD(d, reg(), reg(), vm=vm()))
         elif op == "vfmul":
-            prog.append(isa.VFMUL(reg(), reg(), reg(), vm=vm()))
+            d = dst()
+            if d is None:
+                continue
+            prog.append(isa.VFMUL(d, reg(), reg(), vm=vm()))
         elif op in int3:
-            prog.append(int3[op](reg(), reg(), reg(), vm=vm()))
+            d = dst()
+            if d is None:
+                continue
+            prog.append(int3[op](d, reg(), reg(), vm=vm()))
         elif op in int_cmp:
-            prog.append(int_cmp[op](mdst(), reg(), reg(), vm=vm()))
+            d = mdst()
+            if d is None:
+                continue
+            prog.append(int_cmp[op](d, reg(), reg(), vm=vm()))
         elif op in fp_cmp:
-            prog.append(fp_cmp[op](mdst(), reg(), reg(), vm=vm()))
+            d = mdst()
+            if d is None:
+                continue
+            prog.append(fp_cmp[op](d, reg(), reg(), vm=vm()))
         elif op in logical:
-            prog.append(logical[op](mdst(), mreg(), mreg()))
+            d = mdst()
+            if d is None:
+                continue
+            prog.append(logical[op](d, mreg(), mreg()))
         elif op == "vmerge":
-            prog.append(isa.VMERGE(reg(), reg(), reg()))
+            d = dst()
+            if d is None:
+                continue
+            prog.append(isa.VMERGE(d, reg(), reg()))
         elif op in red:
-            prog.append(red[op](reg(), reg(), vm=vm()))
+            d = dst(1)                    # scalar-dest fold: ONE register
+            if d is None:
+                continue
+            prog.append(red[op](d, reg(), vm=vm()))
         elif op == "vins":
-            prog.append(isa.VINS(reg(), 0))
+            d = dst()
+            if d is None:
+                continue
+            prog.append(isa.VINS(d, 0))
         elif op == "vld":
-            prog.append(isa.VLD(reg(), int(r.randint(0, dump_base - vl)),
+            d = dst()
+            if d is None:
+                continue
+            prog.append(isa.VLD(d, int(r.randint(0, dump_base - vl)),
                                 vm=vm()))
         elif op == "vlds":
+            d = dst()
+            if d is None:
+                continue
             stride = int(r.randint(1, 4))
             hi = dump_base - stride * max(vl - 1, 0) - 1
-            prog.append(isa.VLDS(reg(), int(r.randint(0, hi)), stride,
+            prog.append(isa.VLDS(d, int(r.randint(0, hi)), stride,
                                  vm=vm()))
         elif op in ("vgather", "vluxei"):
             # index values are small ints (or clamped float garbage after
             # scatters hit the region) — both are deterministic
+            d = dst()
+            if d is None:
+                continue
             cls = isa.VGATHER if op == "vgather" else isa.VLUXEI
-            prog.append(cls(reg(), int(r.randint(0, dump_base - 8)),
+            prog.append(cls(d, int(r.randint(0, dump_base - 8)),
                             idx_grp, vm=vm()))
         elif op == "vst":
             prog.append(isa.VST(reg(), int(r.randint(0, dump_base - vl)),
@@ -527,15 +629,34 @@ def random_program(r: np.random.RandomState, sew: int = 64, lmul=1,
         elif op in ("vlseg", "vsseg"):
             nf = int(r.randint(2, min(4, max(isa.LMULS) // Fraction(lmul))
                                + 1))
-            base = [b for b in work if b + nf * span <= idx_grp]
-            if not base:
+            lv = live_regs()
+            if op == "vlseg":
+                # load fields DEFINE registers but must not land in a
+                # live wide group's reserved span (lint E103)
+                cand = [b for b in work if b + nf * span <= idx_grp
+                        and not (set(range(b, b + nf * span)) & lv)]
+            else:
+                # store fields READ registers: every field window must
+                # already be defined (lint E102)
+                cand = [b for b in work if b + nf * span <= idx_grp
+                        and all(set(range(b + f * span,
+                                          b + f * span + awin(span)))
+                                <= defined for f in range(nf))]
+            if not cand:
                 continue
-            vd = base[r.randint(len(base))]
+            vd = cand[r.randint(len(cand))]
             addr = int(r.randint(0, dump_base - nf * max(vl, 1)))
             cls = isa.VLSEG if op == "vlseg" else isa.VSSEG
             prog.append(cls(vd, addr, nf))
+            if op == "vlseg" and vl:
+                for f in range(nf):
+                    defined.update(range(vd + f * span,
+                                         vd + f * span + awin(span)))
         elif op == "vslide":
-            prog.append(isa.VSLIDE(reg(), reg(),
+            d = dst()
+            if d is None:
+                continue
+            prog.append(isa.VSLIDE(d, reg(),
                                    int(r.randint(0, max(vl, 1)))))
         elif op == "vext":
             prog.append(isa.VEXT(int(r.randint(1, 4)), reg(),
@@ -543,20 +664,36 @@ def random_program(r: np.random.RandomState, sew: int = 64, lmul=1,
         elif op == "ldscalar":
             prog.append(isa.LDSCALAR(0, int(r.randint(0, dump_base))))
         elif op == "vfwmul" or op == "vfwma":
-            picked = wide_pair()
+            picked = wide_pair(rw=(op == "vfwma"))
             if picked is None:
                 continue
             d, a, b = picked
             cls = isa.VFWMUL if op == "vfwmul" else isa.VFWMA
             prog.append(cls(d, a, b, vm=vm()))
+            if vl:
+                live[d] = wspan
+                defined.update(range(d, d + awin(wspan)))
         elif op == "vfncvt":
-            src = wide_bases[r.randint(len(wide_bases))]
-            dst = [b for b in work
-                   if b + span <= src or b >= src + wspan or b == src]
-            if not dst:
+            # source: a wide group whose read window is fully defined;
+            # the narrow dest may alias its OWN source base (the linter
+            # consumes the wide value before the write) but must avoid
+            # every other live wide span
+            srcs = [b for b in wide_bases
+                    if set(range(b, b + awin(wspan))) <= defined]
+            if not srcs:
                 continue
-            prog.append(isa.VFNCVT(dst[r.randint(len(dst))], src,
+            src = srcs[r.randint(len(srcs))]
+            lv = {x for bb, ws in live.items() if bb != src
+                  for x in range(bb, bb + ws)}
+            cand = [b for b in work
+                    if (b + span <= src or b >= src + wspan or b == src)
+                    and not (set(range(b, b + span)) & lv)]
+            if not cand:
+                continue
+            prog.append(isa.VFNCVT(cand[r.randint(len(cand))], src,
                                    vm=vm()))
+            if vl:
+                live.pop(src, None)       # wide value consumed
     # dump epilogue: re-vsetvl to the FULL vlmax and store the v0 group
     # plus the work groups into the high-half dump region, so tail lanes
     # (mask/tail-undisturbed leftovers) are compared bit-exactly
@@ -564,13 +701,23 @@ def random_program(r: np.random.RandomState, sew: int = 64, lmul=1,
     for k, b in enumerate(([isa.MASK_REG] + work)[:dump_base // vlmax]
                           if vlmax else []):
         prog.append(isa.VST(b, dump_base + k * vlmax))
-    # pad to a vtype-INDEPENDENT length (prelude 7 + n_ops + epilogue 10
-    # is the across-cells maximum): cells with fewer work groups or
+    # pad to a vtype-INDEPENDENT length (prelude 12 + n_ops + epilogue
+    # 10 is the across-cells maximum): cells with fewer work groups or
     # skipped ops would otherwise land in a different packed prog_len
     # bucket and split the sweep's one-compile signature
-    while len(prog) < n_ops + 17:
+    while len(prog) < n_ops + 22:
         prog.append(isa.LDSCALAR(2, 0))
     return isa.validate_program(prog), mem, sregs
+
+
+def avl_request(prog) -> int:
+    """The body's AVL REQUEST of a :func:`random_program` program.
+
+    The prelude seeds registers at full VLMAX under a first VSETVL, so
+    the request carrying the vl=0 / over-ask edges rides the SECOND one.
+    """
+    vsetvls = [ins for ins in prog if isinstance(ins, isa.VSETVL)]
+    return vsetvls[1].vl
 
 
 # ---------------------------------------------------------------------------
@@ -669,7 +816,8 @@ def record_failure(sew: int, lmul, seed,
 
 def run_cells(batch_a: Callable, batch_b: Callable, cell_iter,
               n_ops: int = 14, vlmax64: int = VLMAX64,
-              tol: Optional[dict] = None, label: str = "differential"):
+              tol: Optional[dict] = None, label: str = "differential",
+              lint: bool = True):
     """Drive random programs, one batch per SEW × LMUL cell, through two
     batch executors and compare program by program.
 
@@ -678,6 +826,13 @@ def run_cells(batch_a: Callable, batch_b: Callable, cell_iter,
     registers on the keys both report. Returns the number of programs
     checked; on mismatch the failing (sew, lmul, seed) triple is recorded
     and named in the assertion.
+
+    ``lint`` (default on) enforces the generator's lint-clean-by-
+    construction contract: every generated program must carry ZERO
+    E-class ``core/analysis.py`` findings before it is executed — the
+    differential grid and the static analyzer audit each other.
+    W-class findings (dead writes, vl=0 bodies) are expected output of a
+    random generator and are not gated.
     """
     tol = tol or TOL
     checked = 0
@@ -687,6 +842,17 @@ def run_cells(batch_a: Callable, batch_b: Callable, cell_iter,
         for seed in seeds:
             p, m, s = random_program(np.random.RandomState(seed), sew,
                                      lmul, n_ops=n_ops, vlmax64=vlmax64)
+            if lint:
+                errs = analysis.errors(analysis.lint_program(
+                    p, vlmax64, mem_words=len(m)))
+                if errs:
+                    where = record_failure(sew, lmul, seed)
+                    note = f" (seed file: {where})" if where else ""
+                    raise AssertionError(
+                        f"{label}: generated program is not lint-clean "
+                        f"at sew={sew} lmul={isa.format_lmul(lmul)} "
+                        f"seed={seed}{note}:\n  "
+                        + "\n  ".join(str(f) for f in errs))
             progs.append(p)
             mems.append(m)
             srs.append(s)

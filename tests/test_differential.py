@@ -164,9 +164,11 @@ def test_generator_programs_are_legal_and_diverse():
             prog, mem, sregs = diff.random_program(r, sew, lmul)
             isa.validate_program(prog)       # would raise if illegal
             kinds |= {type(i).__name__ for i in prog}
-            # prog[0] carries the raw AVL REQUEST (vl=0 / over-ask edges
-            # included); the grant rule caps it at the grouped VLMAX
-            vl = isa.vsetvl_grant(prog[0].vl, diff.VLMAX64, sew, lmul)
+            # the SECOND VSETVL carries the raw AVL REQUEST (vl=0 /
+            # over-ask edges included) — the first is the full-VLMAX
+            # seeding prelude; the grant rule caps it at grouped VLMAX
+            vl = isa.vsetvl_grant(diff.avl_request(prog), diff.VLMAX64,
+                                  sew, lmul)
             granted.append(vl)
             vlmax = isa.grouped_vlmax(diff.VLMAX64, sew, lmul)
             assert 0 <= vl <= vlmax
@@ -202,11 +204,30 @@ def test_generator_emits_mask_and_avl_edges():
         for seed in range(40):
             r = np.random.RandomState(seed)
             prog, _, _ = diff.random_program(r, sew, lmul)
-            req = prog[0].vl
+            req = diff.avl_request(prog)
             saw_req0 |= req == 0
             saw_overask |= req > vlmax
             saw_vm0 |= any(getattr(i, "vm", 1) == 0 for i in prog)
     assert saw_vm0 and saw_req0 and saw_overask
+
+
+def test_generator_grid_is_lint_clean():
+    """The tentpole cross-audit, generator side: EVERY legal grid cell
+    yields programs with ZERO E-class ``core/analysis.py`` findings — the
+    full-VLMAX seeding prelude, live-wide-aware destination picks and
+    segment-window restrictions make them clean by construction.
+    run_cells enforces the same gate before executing (lint=True), so a
+    generator regression fails fast with the offending (cell, seed)."""
+    from repro.core import analysis
+    for sew, lmul in diff.vtype_combos():
+        for seed in range(8):
+            prog, mem, _ = diff.random_program(
+                np.random.RandomState(seed), sew, lmul)
+            errs = analysis.errors(analysis.lint_program(
+                prog, diff.VLMAX64, mem_words=len(mem)))
+            assert not errs, (
+                f"sew={sew} lmul={isa.format_lmul(lmul)} seed={seed}: "
+                + "; ".join(str(f) for f in errs))
 
 
 def test_cells_cover_the_same_seeds_as_grid():

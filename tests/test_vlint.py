@@ -1,0 +1,368 @@
+"""vlint: the static analyzer, its structured errors, and the cross-audit.
+
+Four layers, mirroring the subsystem's contract (docs/isa.md, "Static
+legality and hazard rules"):
+
+- ``isa.IllegalInstruction``: the structured legality error — code,
+  mnemonic, vtype and instruction index threaded by ``check_insn`` and
+  ``validate_program``/``resolve_vtype``.
+- One minimal offending program per lint code (E101..E105, W201..W204),
+  asserted by *named* code — including the ``vsetvl_grant`` edges
+  (negative AVL, vl=0, over-ask) and the v0-overlap rule.
+- The bidirectional fault cross-audit: every ``testing.faults`` mutation
+  is flagged by the linter AND confirmed against the runtime (raise,
+  oracle crash, divergence, or — for W-class — proven behavioral no-op).
+- The zero-trace-effect contract: linting through ``resolve_vtype`` /
+  ``ReferenceEngine(lint=True)`` changes no results and no compile
+  counts.
+"""
+from fractions import Fraction
+
+import numpy as np
+import pytest
+
+from repro.core import analysis, isa, staging
+from repro.testing import differential as diff
+from repro.testing import faults
+
+V = 8          # vlmax64 for every lint call here (vpr=16 at SEW=32)
+
+
+def lint(prog, mem_words=None, defined=(), sregs=None):
+    return analysis.lint_program(prog, V, mem_words=mem_words,
+                                 defined=defined, sregs=sregs)
+
+
+def codes(findings):
+    return [f.code for f in findings]
+
+
+# ---------------------------------------------------------------------------
+# structured legality errors
+# ---------------------------------------------------------------------------
+
+
+def test_illegal_instruction_carries_context():
+    with pytest.raises(isa.IllegalInstruction) as e:
+        isa.check_insn(isa.VADD(1, 2, 3), 64, 1, index=7)
+    err = e.value
+    assert isinstance(err, ValueError)        # backward compatible
+    assert err.code == "class-gate"
+    assert err.mnemonic == "VADD" and err.index == 7
+    assert err.sew == 64 and err.lmul == 1
+    s = str(err)
+    assert "[class-gate]" in s and "at insn 7" in s and "VADD" in s
+
+
+def test_validate_program_threads_the_failing_index():
+    prog = [isa.VSETVL(4, 32, 1), isa.VLD(1, 0), isa.VADD(1, 1, 1),
+            isa.VSETVL(4, 64, 1), isa.VADD(1, 1, 1)]   # illegal at e64
+    with pytest.raises(isa.IllegalInstruction) as e:
+        isa.validate_program(prog)
+    assert e.value.index == 4 and e.value.sew == 64
+
+
+def test_with_context_fills_only_missing_fields():
+    err = isa.IllegalInstruction("emul", "detail", sew=32)
+    assert err.with_context(mnemonic="VFWMUL", sew=64, index=2) is err
+    assert err.mnemonic == "VFWMUL" and err.index == 2
+    assert err.sew == 32                      # pre-set field not clobbered
+
+
+def test_fractional_lmul_spelled_in_message():
+    with pytest.raises(isa.IllegalInstruction) as e:
+        isa.check_insn(isa.VSETVL(4, 64, Fraction(1, 2)), 64, 1, index=0)
+    assert e.value.code == "elen" and "mf2" in str(e.value)
+
+
+# ---------------------------------------------------------------------------
+# one minimal offending program per code
+# ---------------------------------------------------------------------------
+
+
+def test_e101_illegal_insn_under_threaded_vtype():
+    # the vtype is THREADED: VADD is legal at e32 but the VSETVL was
+    # dropped, so it executes under the initial e64 and class-gates
+    fs = lint([isa.VLD(1, 0), isa.VADD(2, 1, 1)])
+    (f,) = [f for f in fs if f.code == analysis.E_ILLEGAL]
+    assert f.rule == "class-gate" and f.index == 1 and f.sew == 64
+
+
+def test_e101_negative_avl_is_a_named_finding():
+    (f,) = lint([isa.VSETVL(-1, 32, 1)])
+    assert f.code == analysis.E_ILLEGAL and f.rule == "negative-avl"
+
+
+def test_e101_v0_overlap_is_a_named_finding():
+    fs = lint([isa.VSETVL(4, 32, 1), isa.VLD(0, 0), isa.VLD(1, 8),
+               isa.VFADD(0, 1, 1, vm=0)])    # masked dest overlaps v0
+    (f,) = [f for f in fs if f.code == analysis.E_ILLEGAL]
+    assert f.rule == "v0-overlap" and f.mnemonic == "VFADD"
+
+
+def test_e102_def_before_use_named_register():
+    fs = lint([isa.VSETVL(4, 32, 1), isa.VST(3, 0)])
+    (f,) = [f for f in fs if f.code == analysis.E_DEF_BEFORE_USE]
+    assert "v3" in f.message
+    # reported once per register, not once per read
+    fs = lint([isa.VSETVL(4, 32, 1), isa.VST(3, 0), isa.VST(3, 8)])
+    assert codes(fs).count(analysis.E_DEF_BEFORE_USE) == 1
+    # the caller can declare entry-live registers (program fragments)
+    assert not lint([isa.VSETVL(4, 32, 1), isa.VST(3, 0)], defined=(3,))
+
+
+def test_e102_scalar_source_is_opt_in():
+    prog = [isa.VSETVL(4, 32, 1), isa.VLD(1, 0), isa.VLD(2, 8),
+            isa.VFMA_VS(2, 5, 1)]            # sreg 5 never written
+    assert analysis.E_DEF_BEFORE_USE not in codes(lint(prog))
+    fs = lint(prog, sregs=())
+    assert any(f.code == analysis.E_DEF_BEFORE_USE and "s5" in f.message
+               for f in fs)
+    assert not analysis.errors(lint(prog, sregs=(5,)))
+    # LDSCALAR and VEXT define scalars for later consumers
+    assert not analysis.errors(lint(
+        [isa.VSETVL(4, 32, 1), isa.LDSCALAR(5, 0), isa.VLD(1, 0),
+         isa.VLD(2, 8), isa.VFMA_VS(2, 5, 1)], sregs=()))
+
+
+def test_e103_wide_clobber_between_producer_and_consumer():
+    fs = lint([isa.VSETVL(4, 32, 1), isa.VLD(1, 0), isa.VLD(2, 8),
+               isa.VFWMUL(4, 1, 2), isa.VFADD(4, 1, 2),
+               isa.VFNCVT(6, 4)])
+    (f,) = [f for f in fs if f.code == analysis.E_WIDE_CLOBBER]
+    assert f.mnemonic == "VFADD" and "v4" in f.message
+    # consuming the wide value FIRST makes the same write legal...
+    assert not analysis.errors(lint(
+        [isa.VSETVL(4, 32, 1), isa.VLD(1, 0), isa.VLD(2, 8),
+         isa.VFWMUL(4, 1, 2), isa.VFNCVT(6, 4), isa.VFADD(4, 1, 2)]))
+    # ...and so does redefining the SAME wide group
+    assert not analysis.errors(lint(
+        [isa.VSETVL(4, 32, 1), isa.VLD(1, 0), isa.VLD(2, 8),
+         isa.VFWMUL(4, 1, 2), isa.VFWMUL(4, 1, 2), isa.VFNCVT(6, 4)]))
+
+
+def test_e104_v0_clobber_reported_at_the_masked_consumer():
+    fs = lint([isa.VSETVL(4, 32, 1), isa.VLD(0, 0), isa.VLD(1, 8),
+               isa.VLD(2, 16), isa.VFMUL(0, 1, 2), isa.VMERGE(3, 1, 2)])
+    (f,) = [f for f in fs if f.code == analysis.E_V0_CLOBBER]
+    assert f.mnemonic == "VMERGE" and "insn 4" in f.message
+    # a mask re-load between clobber and consumer clears the taint
+    assert not analysis.errors(lint(
+        [isa.VSETVL(4, 32, 1), isa.VLD(0, 0), isa.VLD(1, 8),
+         isa.VLD(2, 16), isa.VFMUL(0, 1, 2), isa.VLD(0, 0),
+         isa.VMERGE(3, 1, 2)]))
+    # mask writers (compares/logicals) are legitimate v0 definitions
+    assert not analysis.errors(lint(
+        [isa.VSETVL(4, 32, 1), isa.VLD(1, 8), isa.VLD(2, 16),
+         isa.VMSLT(0, 1, 2), isa.VMERGE(3, 1, 2)]))
+
+
+def test_e105_static_oob_footprints():
+    oob = analysis.E_OOB
+    # unit stride: [60, 68) past 64
+    assert oob in codes(lint([isa.VSETVL(8, 32, 1), isa.VLD(1, 60)],
+                             mem_words=64))
+    # strided endpoint: 1 + 9*7 = 64
+    assert oob in codes(lint(
+        [isa.VSETVL(8, 32, 1), isa.VLDS(1, 1, 9)], mem_words=64))
+    # segment: nf*vl = 16 from 56
+    assert oob in codes(lint(
+        [isa.VSETVL(8, 32, 1), isa.VLSEG(1, 56, 2)], mem_words=64))
+    # scalar load of word 64
+    assert oob in codes(lint([isa.LDSCALAR(1, 64)], mem_words=64))
+    # indexed ops are EXEMPT: the clamp contract handles OOB indices
+    assert not analysis.errors(lint(
+        [isa.VSETVL(8, 32, 1), isa.VLD(2, 0),
+         isa.VGATHER(1, 60, 2), isa.VLUXEI(1, 60, 2),
+         isa.VSUXEI(1, 60, 2)], mem_words=64))
+    # no mem_words -> the footprint checks are off
+    assert not analysis.errors(lint([isa.VSETVL(8, 32, 1),
+                                     isa.VLD(1, 60)]))
+
+
+def test_e105_uses_the_granted_not_requested_vl():
+    # over-ask grants vlmax=16: footprint is [0, 16), not [0, 100)
+    prog = [isa.VSETVL(100, 32, 1), isa.VLD(1, 0)]
+    assert not analysis.errors(lint(prog, mem_words=16))
+    assert analysis.E_OOB in codes(lint(prog, mem_words=15))
+
+
+def test_w201_dead_write_and_its_reads():
+    fs = lint([isa.VSETVL(4, 32, 1), isa.VLD(1, 0), isa.VLD(1, 8)])
+    (f,) = [f for f in fs if f.code == analysis.W_DEAD_WRITE]
+    assert "insn 1" in f.message
+    # a read in between keeps the first write live
+    assert analysis.W_DEAD_WRITE not in codes(lint(
+        [isa.VSETVL(4, 32, 1), isa.VLD(1, 0), isa.VST(1, 8),
+         isa.VLD(1, 0)]))
+    # a masked overwrite merges, never kills
+    assert analysis.W_DEAD_WRITE not in codes(lint(
+        [isa.VSETVL(4, 32, 1), isa.VLD(0, 0), isa.VLD(1, 0),
+         isa.VLD(1, 8, vm=0)]))
+    # a VSLIDE's partial coverage (vl - amount) does not kill either
+    assert analysis.W_DEAD_WRITE not in codes(lint(
+        [isa.VSETVL(4, 32, 1), isa.VLD(1, 0), isa.VLD(2, 0),
+         isa.VSLIDE(2, 1, 2)]))
+    # end-of-program leftovers are output, never flagged
+    assert analysis.W_DEAD_WRITE not in codes(lint(
+        [isa.VSETVL(4, 32, 1), isa.VLD(1, 0)]))
+
+
+def test_w202_vl0_noop_and_no_cascading_findings():
+    fs = lint([isa.VSETVL(0, 32, 1), isa.VFADD(1, 2, 3),
+               isa.VLD(9, 10 ** 9)], mem_words=16)
+    assert codes(fs) == [analysis.W_VL0, analysis.W_VL0]
+    # vl=0 ops read/write NOTHING: no E102/E105 from their operands
+
+
+def test_w203_redundant_vsetvl():
+    fs = lint([isa.VSETVL(4, 32, 1), isa.VSETVL(4, 32, 1)])
+    assert codes(fs) == [analysis.W_REDUNDANT_VSETVL]
+    # same request, different grant state: not redundant
+    assert not lint([isa.VSETVL(4, 32, 1), isa.VSETVL(4, 32, 2)])
+
+
+def test_w204_unreachable_tail():
+    fs = lint([isa.VSETVL(4, 32, 1), isa.VLD(1, 0), isa.VEXT(1, 1, 4),
+               isa.VSLIDE(2, 1, 4)])
+    assert codes(fs).count(analysis.W_UNREACHABLE_TAIL) == 2
+    # the degenerate VSLIDE writes nothing: v2 stays undefined, but
+    # that is the slide's finding, not a def-before-use cascade
+    assert analysis.E_DEF_BEFORE_USE not in codes(fs)
+
+
+def test_vsetvl_grant_edges_thread_through_the_lattice():
+    """vl=0, over-ask and negative AVL as the linter sees them — the
+    same ``vsetvl_grant`` every engine applies."""
+    assert isa.vsetvl_grant(0, V, 32, 1) == 0
+    assert isa.vsetvl_grant(100, V, 32, 1) == 16
+    fs = lint([isa.VSETVL(0, 32, 1), isa.VFADD(1, 1, 1),
+               isa.VSETVL(100, 32, 1), isa.VLD(1, 0),
+               isa.VSETVL(-3, 32, 1)], mem_words=16)
+    assert codes(fs) == [analysis.W_VL0, analysis.E_ILLEGAL]
+    assert fs[-1].rule == "negative-avl"
+
+
+# ---------------------------------------------------------------------------
+# the Finding / assert_clean API
+# ---------------------------------------------------------------------------
+
+
+def test_finding_str_and_severity_partition():
+    fs = lint([isa.VSETVL(4, 32, 1), isa.VST(9, 0), isa.VSETVL(4, 32, 1)])
+    es, ws = analysis.errors(fs), analysis.warnings(fs)
+    assert [f.code for f in es] == [analysis.E_DEF_BEFORE_USE]
+    assert [f.code for f in ws] == [analysis.W_REDUNDANT_VSETVL]
+    assert all(f.is_error for f in es) and not any(f.is_error for f in ws)
+    s = str(es[0])
+    assert s.startswith("E102 at insn 1 VST [e32/m1]:")
+
+
+def test_assert_clean_raises_with_findings_attached():
+    with pytest.raises(analysis.LintError) as e:
+        analysis.assert_clean([isa.VSETVL(4, 32, 1), isa.VST(9, 0)], V)
+    assert isinstance(e.value, ValueError)
+    assert [f.code for f in e.value.findings] == [analysis.E_DEF_BEFORE_USE]
+    # clean programs return their W-class findings for surfacing
+    fs = analysis.assert_clean(
+        [isa.VSETVL(4, 32, 1), isa.VSETVL(4, 32, 1)], V)
+    assert codes(fs) == [analysis.W_REDUNDANT_VSETVL]
+
+
+def test_every_advertised_code_is_reachable():
+    """ALL_CODES is the normative list: each appears in at least one of
+    this file's minimal programs (guards dead codes in the docs)."""
+    seen = set()
+    progs = [
+        ([isa.VSETVL(-1, 32, 1)], None),
+        ([isa.VSETVL(4, 32, 1), isa.VST(3, 0)], None),
+        ([isa.VSETVL(4, 32, 1), isa.VLD(1, 0), isa.VLD(2, 8),
+          isa.VFWMUL(4, 1, 2), isa.VFADD(4, 1, 2)], None),
+        ([isa.VSETVL(4, 32, 1), isa.VLD(0, 0), isa.VLD(1, 8),
+          isa.VFMUL(0, 1, 1), isa.VMERGE(2, 1, 1)], None),
+        ([isa.VSETVL(8, 32, 1), isa.VLD(1, 60)], 64),
+        ([isa.VSETVL(4, 32, 1), isa.VLD(1, 0), isa.VLD(1, 8)], None),
+        ([isa.VSETVL(0, 32, 1), isa.VFADD(1, 1, 1)], None),
+        ([isa.VSETVL(4, 32, 1), isa.VSETVL(4, 32, 1)], None),
+        ([isa.VSETVL(4, 32, 1), isa.VLD(1, 0), isa.VEXT(1, 1, 9)], None),
+    ]
+    for prog, mw in progs:
+        seen |= set(codes(lint(prog, mem_words=mw)))
+    assert seen == set(analysis.ALL_CODES)
+
+
+# ---------------------------------------------------------------------------
+# the bidirectional fault cross-audit
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("fault", faults.REGISTRY,
+                         ids=[f.name for f in faults.REGISTRY])
+def test_fault_flagged_and_confirmed_by_the_runtime(fault):
+    """Each mutation class: the linter names the expected code on the
+    faulty program (and none on the clean one), and the runtime agrees —
+    E-class raises/crashes/diverges, W-class provably changes nothing."""
+    rep = faults.verify(fault)
+    assert rep["code"] == fault.expected_code
+
+
+def test_fault_registry_covers_the_contract():
+    """>= 8 mutation classes, every E code present, both W no-op modes."""
+    assert len(faults.REGISTRY) >= 8
+    covered = {f.expected_code for f in faults.REGISTRY}
+    assert {analysis.E_ILLEGAL, analysis.E_DEF_BEFORE_USE,
+            analysis.E_WIDE_CLOBBER, analysis.E_V0_CLOBBER,
+            analysis.E_OOB} <= covered
+    assert {f.confirm for f in faults.REGISTRY} == \
+        {faults.RAISE, faults.CRASH, faults.DIVERGE, faults.NOOP}
+
+
+# ---------------------------------------------------------------------------
+# zero trace effect: lint changes no results and no compiles
+# ---------------------------------------------------------------------------
+
+
+def test_resolve_vtype_lint_is_pure_pre_pass():
+    prog = [isa.VSETVL(4, 32, 1), isa.VLD(1, 0), isa.VFADD(2, 1, 1),
+            isa.VST(2, 8)]
+    plain = staging.resolve_vtype(prog, V)
+    linted = staging.resolve_vtype(prog, V, lint=True, mem_words=64)
+    assert plain == linted
+    with pytest.raises(analysis.LintError):
+        staging.resolve_vtype([isa.VSETVL(4, 32, 1), isa.VST(9, 0)], V,
+                              lint=True)
+    # without lint the same program resolves: check_insn alone cannot
+    # see whole-program hazards — that asymmetry is the linter's job
+    staging.resolve_vtype([isa.VSETVL(4, 32, 1), isa.VST(9, 0)], V)
+
+
+def test_engine_lint_gate_keeps_one_compile_and_same_results():
+    """ReferenceEngine(lint=True) rejects E-class programs before the
+    device sees them, passes clean ones bit-identically, and shares the
+    SAME cached trace as an unlinted engine: compiles stays 1."""
+    from repro.configs.ara import AraConfig
+    from repro.core.vector_engine import ReferenceEngine
+
+    cfg = AraConfig(lanes=2)
+    cache = staging.TraceCache()
+    plain = ReferenceEngine(cfg, vlmax=V, cache=cache)
+    gated = ReferenceEngine(cfg, vlmax=V, cache=cache, lint=True)
+
+    progs, mems = [], []
+    for seed in range(3):
+        p, m, _ = diff.random_program(np.random.RandomState(seed), 32, 2,
+                                      vlmax64=V)
+        progs.append(p)
+        mems.append(m)
+    win = plain.vlmax_for(min(isa.SEWS), max(isa.LMULS))
+    out_a, _ = plain.run_many(progs, mems, window=win)
+    n_after_plain = cache.stats.compiles
+    out_b, _ = gated.run_many(progs, mems, window=win)
+    assert cache.stats.compiles == n_after_plain == 1
+    for a, b in zip(out_a, out_b):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    bad = [isa.VSETVL(4, 32, 1), isa.VST(9, 0)]
+    with pytest.raises(analysis.LintError):
+        gated.run_many([bad], [np.zeros(64)], window=win)
+    plain.run_many([bad], [np.zeros(64)], window=win)   # unlinted: runs
