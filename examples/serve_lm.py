@@ -1,5 +1,6 @@
-"""Serving driver: batched requests through the continuous-batching engine
-(prefill into slots, lockstep decode, admission on completion).
+"""Serving driver: batched requests through the hardened serving engine
+(bounded admission, deadlines, degrade ladder, invariant checks — see
+docs/serving.md).
 
   PYTHONPATH=src python examples/serve_lm.py [--requests 12 --slots 4]
 """
@@ -12,7 +13,7 @@ import numpy as np
 from repro.configs import get_config, reduced
 from repro.models.layers import init_params
 from repro.models.transformer import model_template
-from repro.serving.engine import Request, ServingEngine
+from repro.serving import DegradeLadder, Request, ServingEngine
 
 
 def main():
@@ -21,25 +22,33 @@ def main():
     ap.add_argument("--requests", type=int, default=12)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=24)
+    ap.add_argument("--deadline", type=int, default=None,
+                    help="TTL in engine ticks applied to half the requests")
     args = ap.parse_args()
 
     cfg = reduced(get_config(args.arch))
     params = init_params(model_template(cfg), jax.random.PRNGKey(0))
-    engine = ServingEngine(cfg, params, slots=args.slots, max_seq=128)
+    engine = ServingEngine(cfg, params, slots=args.slots, max_seq=128,
+                           degrade=DegradeLadder(bf16_at=2.0))
 
     rng = np.random.RandomState(0)
     t0 = time.time()
     for i in range(args.requests):
-        engine.submit(Request(
+        deadline = args.deadline if (args.deadline and i % 2) else None
+        reason = engine.submit(Request(
             uid=i, prompt=rng.randint(0, cfg.vocab_size, 16).astype(np.int32),
-            max_new_tokens=args.max_new))
+            max_new_tokens=args.max_new, deadline=deadline))
+        if reason is not None:
+            print(f"  req {i} rejected: {reason.value}")
     done = engine.run_to_completion(max_steps=5000)
     dt = time.time() - t0
     tokens = sum(len(r.out_tokens) for r in done)
     print(f"{len(done)} requests, {tokens} new tokens in {dt:.2f}s "
           f"({tokens/dt:.1f} tok/s, {args.slots} slots)")
     for r in done[:3]:
-        print(f"  req {r.uid}: first tokens {r.out_tokens[:6]}")
+        print(f"  req {r.uid}: {r.state.value} "
+              f"first tokens {r.out_tokens[:6]}")
+    print(f"  stats: {engine.stats()}")
 
 
 if __name__ == "__main__":

@@ -79,3 +79,70 @@ def flash_attention(q, k, v, *, policy: Policy | None = None, **kw):
 def ssm_scan(q, k, v, log_decay, scale, **kw):
     kw.setdefault("interpret", _default_interpret())
     return _ssm(q, k, v, log_decay, scale, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Serving logits head (Policy-routed degrade ladder)
+# ---------------------------------------------------------------------------
+
+
+def _mxu_tiles(m: int, k: int, n: int, b: int = 128) -> bool:
+    """True when (m,k)@(k,n) tiles the Pallas matmul's MXU blocks."""
+    return all(d % min(b, d) == 0 for d in (m, k, n))
+
+
+def lm_head_route(m: int, k: int, n: int, compute_dtype: str) -> str:
+    """Which path :func:`lm_head` takes for an (m,k)@(k,n) head at a given
+    compute dtype — host-side, so the serving engine can log the route."""
+    if compute_dtype in ("float32", "float64"):
+        return "einsum-fp32"
+    if not _mxu_tiles(m, k, n):
+        return "einsum-fallback"
+    return "pallas-int8" if compute_dtype == "int8" \
+        else f"pallas-{jnp.dtype(compute_dtype).name}"
+
+
+def lm_head(x, w, *, compute_dtype: str = "float32", interpret=None):
+    """Logits head ``x (B,S,D) @ w (D,V) -> (B,S,V) float32``, routed by
+    compute dtype — the serving degrade ladder's consumer of the PR-1/PR-5
+    Policy kernels, so the quantized datapath actually carries traffic:
+
+    - ``float32``: plain einsum (the exact path).
+    - ``bfloat16``/``float16``: the Pallas :func:`matmul` kernel at the
+      narrow width with fp32 VMEM accumulation (§III-E4's 2x rate).
+    - ``int8``: dynamic symmetric per-tensor quantization of both
+      operands through :func:`matmul_int8` (int32 accumulation, the 8x
+      Ara rung / TPU 394-TOPS mode), dequantized to fp32 logits.
+
+    Shapes that don't tile the MXU blocks fall back to an einsum at the
+    requested width (``lm_head_route`` reports which path ran).
+    """
+    b, s, d = x.shape
+    d2, v = w.shape
+    assert d == d2, (x.shape, w.shape)
+    route = lm_head_route(b * s, d, v, compute_dtype)
+    x2 = x.reshape(b * s, d)
+    if route == "einsum-fp32":
+        out = jnp.einsum("md,dv->mv", x2.astype(jnp.float32),
+                         w.astype(jnp.float32))
+    elif route == "pallas-int8":
+        sx = jnp.max(jnp.abs(x2.astype(jnp.float32))) / 127.0 + 1e-8
+        sw = jnp.max(jnp.abs(w.astype(jnp.float32))) / 127.0 + 1e-8
+        qx = jnp.clip(jnp.round(x2.astype(jnp.float32) / sx),
+                      -127, 127).astype(jnp.int8)
+        qw = jnp.clip(jnp.round(w.astype(jnp.float32) / sw),
+                      -127, 127).astype(jnp.int8)
+        acc = matmul_int8(qx, qw)                    # exact int32
+        out = acc.astype(jnp.float32) * (sx * sw)
+    elif route == "einsum-fallback":
+        dt = jnp.dtype("bfloat16" if compute_dtype == "int8"
+                       else compute_dtype)
+        out = jnp.einsum("md,dv->mv", x2.astype(dt), w.astype(dt),
+                         preferred_element_type=jnp.float32)
+    else:
+        dt = jnp.dtype(compute_dtype)
+        kw = {"out_dtype": jnp.float32}
+        if interpret is not None:
+            kw["interpret"] = interpret
+        out = matmul(x2.astype(dt), w.astype(dt), **kw)
+    return out.astype(jnp.float32).reshape(b, s, v)

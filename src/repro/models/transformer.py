@@ -237,13 +237,18 @@ def _scan_layers(cfg, stacked_params, body, x, cache_xs=None):
 def forward(cfg: ArchConfig, params: dict, tokens, *,
             ctx: Optional[MeshCtx] = None,
             cache: Optional[dict] = None,
-            frontend_emb=None):
+            frontend_emb=None,
+            head_fn=None):
     """Shared forward. tokens (B,S) int32.
 
     cache=None  -> full causal forward (training / scoring), returns
                    (logits, aux, extras)
     cache=dict  -> prefill (lengths=0, S=prompt) or decode (S small);
                    returns (logits, aux, new_cache)
+    head_fn     -> optional ``(x, unembed) -> logits`` replacing the final
+                   einsum — the serving degrade ladder routes the logits
+                   matmul through the Policy Pallas kernels here
+                   (``kernels.ops.lm_head``).
     """
     ctx = ctx or MeshCtx(mesh=None)
     from repro.models import attention as attn_mod
@@ -372,7 +377,10 @@ def forward(cfg: ArchConfig, params: dict, tokens, *,
 
     x = rms_norm(x, params["final_norm"], cfg.norm_eps)
     unembed = params["embed"].T if cfg.tie_embeddings else params["unembed"]
-    logits = jnp.einsum("bsd,dv->bsv", x, unembed.astype(compute_dtype))
+    if head_fn is not None:
+        logits = head_fn(x, unembed.astype(compute_dtype))
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", x, unembed.astype(compute_dtype))
 
     if cache is not None:
         new_cache["lengths"] = lengths + s

@@ -1,0 +1,280 @@
+"""Hardened serving stack tests: scheduler policy, engine invariants,
+oracle bit-exactness under slot churn, the degrade ladder, and the
+bidirectional fault-registry audit (serving/faults.py).
+
+The oracle throughout is greedy decode by repeated *full forward* with no
+KV cache and no batching — any slot-reuse, masking, or eviction bug that
+touches neighbouring state shows up as a token mismatch.
+"""
+import collections
+
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+import jax.numpy as jnp  # noqa: E402
+
+from repro.kernels import ops as kernel_ops  # noqa: E402
+from repro.serving import faults  # noqa: E402
+from repro.serving.engine import DegradeLadder  # noqa: E402
+from repro.serving.scheduler import (Q_QUARANTINED, Request,  # noqa: E402
+                                     RejectReason, Scheduler, State,
+                                     T_EXPIRED, T_INFEASIBLE)
+
+pytestmark = pytest.mark.serving
+
+
+def _req(uid=0, plen=4, seed=None, **kw):
+    return Request(uid=uid, prompt=faults.prompt(
+        uid if seed is None else seed, plen), **kw)
+
+
+# ---------------------------------------------------------------------------
+# Scheduler: pure host policy (no model, no jax arrays on device)
+# ---------------------------------------------------------------------------
+
+
+class TestScheduler:
+    def mk(self, **kw):
+        kw.setdefault("slots", 1)
+        kw.setdefault("max_seq", 32)
+        return Scheduler(**kw)
+
+    def test_queue_is_a_deque(self):
+        # accounting satellite: admission must be O(1) pop, not list.pop(0)
+        assert isinstance(self.mk().queue, collections.deque)
+
+    def test_reject_codes(self):
+        s = self.mk(max_queue=2)
+        assert s.submit(Request(0, np.zeros(0, np.int32)), 0) \
+            is RejectReason.BAD_REQUEST
+        assert s.submit(_req(1, max_new_tokens=0), 0) \
+            is RejectReason.BAD_REQUEST
+        assert s.submit(_req(2, plen=33), 0) \
+            is RejectReason.PROMPT_TOO_LONG
+        assert s.submit(_req(3, max_new_tokens=5, deadline=2), 0) \
+            is RejectReason.DEADLINE_INFEASIBLE
+        assert s.submit(_req(4), 0) is None
+        assert s.submit(_req(5), 0) is None
+        assert s.submit(_req(6), 0) is RejectReason.QUEUE_FULL
+        # every reject is recorded with state + named counter
+        assert all(r.state == State.REJECTED for r in s.rejected)
+        assert s.counters[RejectReason.QUEUE_FULL.value] == 1
+        assert s.counters["accepted"] == 2
+
+    def test_deadline_expiry_and_infeasible_shed(self):
+        s = self.mk()
+        expired = _req(0, max_new_tokens=2, deadline=3)
+        infeasible = _req(1, max_new_tokens=4, deadline=6)
+        safe = _req(2, max_new_tokens=2)
+        for r in (expired, infeasible, safe):
+            assert s.submit(r, 0) is None
+        dropped = s.tick(3)   # expired: now == deadline; infeasible: 3 < 4
+        assert set(r.uid for r in dropped) == {0, 1}
+        assert expired.state == State.TIMED_OUT
+        assert expired.finish_reason == T_EXPIRED
+        assert infeasible.finish_reason == T_INFEASIBLE
+        assert list(s.queue) == [safe]
+        assert s.counters[T_EXPIRED] == 1 and s.counters[T_INFEASIBLE] == 1
+
+    def test_backoff_rotation_preserves_fifo(self):
+        s = self.mk()
+        backing_off, ready = _req(0), _req(1)
+        backing_off.not_before = 10
+        s.queue.extend([backing_off, ready])
+        assert s.next_ready(now=5) is ready
+        assert list(s.queue) == [backing_off]
+        assert s.next_ready(now=5) is None         # still gated
+        assert s.next_ready(now=10) is backing_off  # gate opened
+
+    def test_requeue_then_quarantine(self):
+        s = self.mk(max_retries=1, backoff_base=3)
+        r = _req(0)
+        r.out_tokens = [7, 7]
+        assert s.requeue(r, now=5, cause="nan-logits") is True
+        assert r.retries == 1 and r.out_tokens == []   # restart from prompt
+        assert r.not_before == 5 + 3 and r.state == State.QUEUED
+        assert s.queue[0] is r                          # front, not back
+        assert s.requeue(r, now=9, cause="nan-logits") is False
+        assert r.state == State.FAILED
+        assert r.finish_reason == f"{Q_QUARANTINED}:nan-logits"
+        assert r in s.quarantined and s.counters[Q_QUARANTINED] == 1
+
+    def test_pressure(self):
+        s = self.mk(slots=4)
+        s.queue.extend(_req(i) for i in range(6))
+        assert s.pressure(active=2) == pytest.approx(2.0)
+
+
+# ---------------------------------------------------------------------------
+# Engine: token accounting, oracle bit-exactness, isolation
+# ---------------------------------------------------------------------------
+
+
+def test_budget_and_eos_semantics():
+    """Pinned by the Request docstring: budget counts the prefill token;
+    eos is included in out_tokens; eos_id=-1 never stops early."""
+    # budget of 1: exactly the prefill token, slot never held across steps
+    eng = faults.make_engine()
+    one = _req(0, max_new_tokens=1)
+    eng.submit(one)
+    eng.run_to_completion(10)
+    assert one.state == State.DONE
+    assert one.out_tokens == faults.oracle(one.prompt, 1)
+    assert not eng.active and not eng.sched.queue
+
+    # budget termination: len(out_tokens) == max_new_tokens exactly
+    eng = faults.make_engine()
+    budget = _req(1, max_new_tokens=5)
+    eng.submit(budget)
+    eng.run_to_completion(20)
+    assert budget.out_tokens == faults.oracle(budget.prompt, 5)
+
+    # eos stops at first occurrence and IS included in the output
+    ref = faults.oracle(faults.prompt(2, 4), 8)
+    eos = ref[2]
+    first = ref.index(eos)
+    eng = faults.make_engine()
+    stopper = _req(2, max_new_tokens=8, eos_id=eos)
+    eng.submit(stopper)
+    eng.run_to_completion(20)
+    assert stopper.state == State.DONE
+    assert len(stopper.out_tokens) == first + 1
+    assert stopper.out_tokens[-1] == eos
+    assert stopper.out_tokens == ref[:first + 1]
+
+
+def test_slot_churn_matches_oracle():
+    """Many short requests through few slots: every completion must be
+    bit-identical to the per-request full-forward oracle — slot reuse,
+    lengths masking, and prefill-overwrite leave no cross-talk."""
+    eng = faults.make_engine(slots=2)
+    reqs = [_req(uid=i, seed=60 + i, plen=4 + (i % 3),
+                 max_new_tokens=3 + (i % 4)) for i in range(8)]
+    for r in reqs:
+        assert eng.submit(r) is None
+    eng.run_to_completion(200)
+    for r in reqs:
+        assert r.state == State.DONE, (r.uid, r.state)
+        assert r.out_tokens == faults.oracle(r.prompt, r.max_new_tokens), \
+            f"slot churn corrupted uid={r.uid}"
+    assert not eng.active and not eng.sched.queue
+    assert eng.stats()["finished_states"] == {"done": 8}
+
+
+def test_overflow_evicts_and_neighbor_kv_bit_identical():
+    """A request that would decode past max_seq is retired EVICTED at
+    capacity (never clamp-overwrites row max_seq-1), and the neighbour
+    slot's KV rows are bit-identical to a run without the overflowing
+    request."""
+    max_seq = 16
+    neighbor_a = _req(uid=0, seed=70, plen=4, max_new_tokens=12)
+    over = _req(uid=1, seed=71, plen=6, max_new_tokens=16)
+
+    eng_a = faults.make_engine(max_seq=max_seq)   # neighbor + overflow
+    eng_a.submit(neighbor_a)
+    eng_a.submit(over)
+    for _ in range(40):
+        eng_a.step()
+        if any(e["code"] == "I_KV_CAPACITY" for e in eng_a.events):
+            break
+    assert over.state == State.EVICTED
+    assert over.finish_reason == "I_KV_CAPACITY"
+    want = 1 + (max_seq - len(over.prompt))
+    assert len(over.out_tokens) == want
+    assert over.out_tokens == faults.oracle(over.prompt, want)
+    assert neighbor_a.state == State.DECODE       # still in flight
+
+    # reference: the neighbour alone, stepped the same number of ticks
+    neighbor_b = _req(uid=0, seed=70, plen=4, max_new_tokens=12)
+    eng_b = faults.make_engine(max_seq=max_seq)
+    eng_b.submit(neighbor_b)
+    for _ in range(eng_a.tick):
+        eng_b.step()
+    assert neighbor_a.out_tokens == neighbor_b.out_tokens
+    for key in ("k", "v"):
+        a = np.asarray(eng_a.cache[key][:, 0])
+        b = np.asarray(eng_b.cache[key][:, 0])
+        np.testing.assert_array_equal(
+            a, b, err_msg=f"neighbor {key} rows differ after eviction")
+    # the capacity invariant held throughout
+    assert int(np.asarray(eng_a.cache["lengths"]).max()) <= max_seq
+    eng_a.run_to_completion(40)
+    assert neighbor_a.out_tokens == faults.oracle(neighbor_a.prompt, 12)
+
+
+def test_degrade_ladder_under_pressure():
+    cfg, _ = faults.fixture()
+    eng = faults.make_engine(degrade=DegradeLadder(bf16_at=1.0, int8_at=3.0))
+    reqs = [_req(uid=i, seed=50 + i, max_new_tokens=4) for i in range(8)]
+    for r in reqs:
+        eng.submit(r)
+    eng.run_to_completion(100)
+    assert all(r.state == State.DONE for r in reqs)
+    assert eng.counters["degraded_steps_int8"] > 0    # peak pressure
+    assert eng.counters["degraded_steps_bf16"] > 0    # draining
+    assert eng.counters["degraded_steps"] \
+        == eng.counters["degraded_steps_int8"] \
+        + eng.counters["degraded_steps_bf16"]
+    assert all(0 <= t < cfg.vocab_size for r in reqs for t in r.out_tokens)
+
+
+def test_degrade_off_is_bit_exact():
+    """degrade=None (the default) must not perturb numerics."""
+    eng = faults.make_engine()
+    r = _req(uid=0, seed=80, max_new_tokens=6)
+    eng.submit(r)
+    eng.run_to_completion(20)
+    assert r.out_tokens == faults.oracle(r.prompt, 6)
+    assert eng.counters["degraded_steps"] == 0
+
+
+def test_lm_head_routes_and_numerics():
+    rng = np.random.RandomState(0)
+    x = jnp.asarray(rng.randn(2, 4, 64), jnp.float32)
+    w = jnp.asarray(rng.randn(64, 256), jnp.float32)
+    ref = jnp.einsum("bsd,dv->bsv", x, w)
+
+    assert kernel_ops.lm_head_route(8, 64, 256, "float32") == "einsum-fp32"
+    out = kernel_ops.lm_head(x, w, compute_dtype="float32")
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+    assert kernel_ops.lm_head_route(8, 64, 256, "bfloat16") \
+        == "pallas-bfloat16"
+    out16 = kernel_ops.lm_head(x, w, compute_dtype="bfloat16")
+    rel = float(jnp.max(jnp.abs(out16 - ref)) / jnp.max(jnp.abs(ref)))
+    assert rel < 0.05
+    agree = float(jnp.mean((jnp.argmax(out16, -1)
+                            == jnp.argmax(ref, -1)).astype(jnp.float32)))
+    assert agree >= 0.75
+
+    assert kernel_ops.lm_head_route(8, 64, 256, "int8") == "pallas-int8"
+    out8 = kernel_ops.lm_head(x, w, compute_dtype="int8")
+    rel8 = float(jnp.max(jnp.abs(out8 - ref)) / jnp.max(jnp.abs(ref)))
+    assert rel8 < 0.1
+    assert out8.dtype == jnp.float32
+
+    # non-MXU-tiling vocab falls back to einsum at the narrow width
+    w_odd = jnp.asarray(rng.randn(64, 200), jnp.float32)
+    assert kernel_ops.lm_head_route(8, 64, 200, "int8") == "einsum-fallback"
+    out_f = kernel_ops.lm_head(x, w_odd, compute_dtype="int8")
+    assert out_f.shape == (2, 4, 200) and out_f.dtype == jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# The bidirectional fault audit: detected AND recovered, damage confirmed
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("fault", faults.REGISTRY,
+                         ids=[f.name for f in faults.REGISTRY])
+def test_fault_registry_bidirectional(fault):
+    report = faults.verify(fault)
+    assert report["detect"] == fault.detect_code
+
+
+def test_registry_covers_required_classes():
+    """The ISSUE's seven fault classes all have registry entries."""
+    names = {f.name for f in faults.REGISTRY}
+    assert {"kv-corrupt", "slot-leak", "prompt-too-long", "decode-overflow",
+            "nan-logits", "queue-flood", "deadline-storm"} <= names
