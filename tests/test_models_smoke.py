@@ -77,6 +77,28 @@ def test_prefill_decode_equals_full_forward(name):
                                    rtol=1e-3, atol=1e-3)
 
 
+@pytest.mark.attention
+def test_long_context_train_step():
+    """A train step well past the single-softmax threshold: the blockwise
+    q-block loop with per-block checkpointing carries it (the full-length
+    version — 4x the quadratic ceiling — runs in benchmarks/
+    attention_long.py's long_train_step gate)."""
+    seq = 256
+    cfg = reduced(get_config("tinyllama-1.1b"))
+    params = init_params(tf.model_template(cfg), jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (1, seq), 0,
+                              cfg.vocab_size)
+    batch = {"tokens": toks, "labels": jnp.roll(toks, -1, axis=1)}
+    attn = step_lib.AttnOverrides(flash="auto", chunk=64, threshold=32,
+                                  block_remat="dots")
+    bundle = step_lib.make_train_step(cfg, adamw.OptConfig(),
+                                      MeshCtx(mesh=None), attn=attn)
+    state = {"params": params, "opt": adamw.init(adamw.OptConfig(), params)}
+    _, metrics = jax.jit(bundle.step_fn)(state, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    assert float(metrics["grad_norm"]) > 0
+
+
 def test_long_context_rule():
     """long_500k runs only for sub-quadratic archs (assignment rule)."""
     sub = {n for n in ARCH_NAMES if get_config(n).subquadratic}
